@@ -1,0 +1,211 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measured point).
+Sections:
+  fig2_overdecomp     weak-scaling analogue: time/iter vs ODF (+latency)
+  fig3_loadbalance    heterogeneous fleet: no-LB vs GreedyRefine (rate-aware)
+  fig5_interrupt_cpu  rescale stage breakdown, host-memory store
+  fig6_interrupt_dev  rescale stage breakdown, device-resident store
+  fig7_modes          interruption-handling overhead, modes A/B/C
+  fig8_endtoend       total runtime vs #simultaneous interruptions
+  kernels             per-kernel throughput (ref path) + allclose check
+  roofline            summary over artifacts/dryrun (§Roofline)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+# ------------------------------------------------------------------ fig 2
+def fig2_overdecomp():
+    from repro.apps.jacobi2d import run_jacobi
+    for latency_us, tag in ((0, "fast-net"), (500, "cloud-tcp")):
+        base = None
+        for odf in (1, 2, 4, 8):
+            out = run_jacobi(grid_size=512, n_pes=4, odf=odf, iters=14,
+                             comm_latency_s=latency_us * 1e-6)
+            us = out.time_per_iter * 1e6
+            base = base or us
+            row(f"fig2_overdecomp_{tag}_odf{odf}", us,
+                f"speedup_vs_odf1={base/us:.2f}")
+
+
+# ------------------------------------------------------------------ fig 3
+def fig3_loadbalance():
+    rates = {"cpu_fleet": [1.0, 0.85, 0.6, 1.0],
+             "gpu_fleet": [1.0, 1.0, 0.55, 0.55]}
+    from repro.apps.jacobi2d import run_jacobi
+    for fleet, mult in rates.items():
+        res = {}
+        for strat, aware, tag in ((None, False, "nolb"),
+                                  ("greedy_refine", False, "refine_blind"),
+                                  ("greedy_refine", True, "refine_rate")):
+            out = run_jacobi(grid_size=768, n_pes=4, odf=4, iters=20,
+                             kernel="lulesh", pe_rate_multipliers=mult,
+                             lb_strategy=strat, lb_every=6, rate_aware=aware)
+            tail = out.per_iter[-6:]
+            us = float(np.mean([m["time_per_iter"] for m in tail])) * 1e6
+            res[tag] = us
+            imp = (1 - us / res["nolb"]) * 100 if "nolb" in res else 0.0
+            row(f"fig3_lb_{fleet}_{tag}", us, f"improvement={imp:.1f}%")
+
+
+# ------------------------------------------------------------- fig 5 / 6
+def _interrupt_breakdown(store_kind: str, tag: str):
+    from repro.configs import ARCHS, SHAPES
+    from repro.launch.train import ElasticTrainer
+    cfg = ARCHS["granite-8b"].reduced()
+    shape = SHAPES["train_4k"].reduced()
+    tr = ElasticTrainer(cfg, shape, n_devices=1, store_kind=store_kind)
+    tr.train(2, log_every=0)
+    ev_shrink = tr.runtime.rescale_to(1)   # simulated interruption rescale
+    tr.train(1, log_every=0)
+    ev_expand = tr.runtime.rescale_to(1)
+    for ev, kind in ((ev_shrink, "shrink"), (ev_expand, "expand")):
+        for stage, sec in ev.stages.items():
+            row(f"{tag}_{kind}_{stage}", sec * 1e6,
+                f"total={ev.total:.3f}s")
+
+
+def fig5_interrupt_cpu():
+    _interrupt_breakdown("memory", "fig5_cpu")
+
+
+def fig6_interrupt_dev():
+    _interrupt_breakdown("device", "fig6_dev")
+
+
+# ------------------------------------------------------------------ fig 7
+def fig7_modes():
+    from benchmarks.measure import calibrated_cost_model
+    from repro.core.cloud import CloudManager, Mode
+    cost = calibrated_cost_model(state_bytes=16 * 64e6)
+    for accel, hw in ((False, "cpu"), (True, "gpu")):
+        cost_hw = cost.__class__(**{**cost.__dict__, "accelerator": accel})
+        for mode in Mode:
+            cm = CloudManager(n_instances=16, mode=mode, cost=cost_hw,
+                              total_iters=5000, iter_seconds=0.2)
+            cm.inject_interruption(t=100.0, count=1)
+            rep = cm.run()
+            total_overhead = rep.total_time - rep.ideal_time
+            row(f"fig7_modes_{hw}_mode{mode.value}",
+                total_overhead * 1e6,
+                f"overhead_s={total_overhead:.1f};"
+                f"rescales={len(rep.rescales)}")
+
+
+# ------------------------------------------------------------------ fig 8
+def fig8_endtoend():
+    from benchmarks.measure import calibrated_cost_model
+    from repro.core.cloud import CloudManager, Mode
+    cost = calibrated_cost_model(state_bytes=16 * 64e6)
+    for accel, hw, iters in ((False, "cpu", 5000), (True, "gpu", 30000)):
+        cost_hw = cost.__class__(**{**cost.__dict__, "accelerator": accel})
+        for n_int in (0, 1, 2, 4, 8):
+            for mode in (Mode.B_REACTIVE, Mode.C_PROACTIVE):
+                cm = CloudManager(n_instances=16, mode=mode, cost=cost_hw,
+                                  total_iters=iters, iter_seconds=0.2)
+                if n_int:
+                    cm.inject_interruption(t=100.0, count=n_int)
+                rep = cm.run()
+                row(f"fig8_endtoend_{hw}_mode{mode.value}_int{n_int}",
+                    rep.total_time * 1e6,
+                    f"overhead={100*rep.overhead_frac:.2f}%")
+
+
+# ------------------------------------------------------------------ kernels
+def kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.jacobi.ref import jacobi_step_ref
+    from repro.models.layers import blockwise_attention
+    from repro.models.mamba2 import ssd_intra_chunk_ref
+
+    g = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+    f = jax.jit(jacobi_step_ref)
+    f(g).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        out = f(g)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    row("kernel_jacobi_ref_1024", us,
+        f"GBps={1024*1024*4*5/(us/1e6)/1e9:.1f}")
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 1024, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 1024, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, causal=True, block_q=256, block_kv=256))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f(q, k, v)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    flops = 2 * 2 * 1024 * 1024 * 8 * 64 / 2  # causal half
+    row("kernel_flash_ref_1k", us, f"GFLOPs={flops/(us/1e6)/1e9:.1f}")
+
+    b, nc, l, h, p, n = 1, 8, 128, 8, 64, 64
+    xs = jax.random.split(jax.random.PRNGKey(1), 5)
+    xr = jax.random.normal(xs[0], (b, nc, l, h, p))
+    dtr = jax.nn.softplus(jax.random.normal(xs[1], (b, nc, l, h)))
+    dacs = jnp.cumsum(-jnp.abs(jax.random.normal(xs[2], (b, nc, l, h))) * .1,
+                      axis=2)
+    Br = jax.random.normal(xs[3], (b, nc, l, n))
+    Cr = jax.random.normal(xs[4], (b, nc, l, n))
+    f = jax.jit(ssd_intra_chunk_ref)
+    jax.block_until_ready(f(xr, dtr, dacs, Br, Cr))
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f(xr, dtr, dacs, Br, Cr)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    row("kernel_ssd_ref_1k", us, f"chunk={l}")
+
+
+# ------------------------------------------------------------------ roofline
+def roofline():
+    from repro.launch.roofline import load_table
+    try:
+        rows = load_table()
+    except Exception as e:
+        row("roofline_missing", 0.0, str(e))
+        return
+    for r in rows:
+        if "skipped" in r or "error" in r:
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        row(f"roofline_{r['arch']}_{r['shape']}", bound * 1e6,
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f}")
+
+
+SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
+            fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
+            roofline]
+
+
+def main() -> None:
+    names = sys.argv[1:]
+    print("name,us_per_call,derived")
+    for fn in SECTIONS:
+        if names and fn.__name__ not in names:
+            continue
+        t0 = time.perf_counter()
+        fn()
+        print(f"# section {fn.__name__} took {time.perf_counter()-t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig 2-3 mini: overdecomposition + rate-aware LB on Jacobi2D.
+
+Sweeps the overdecomposition factor under an injected cloud-like network
+latency, then shows rate-aware GreedyRefine on a heterogeneous "fleet".
+
+    PYTHONPATH=src python examples/jacobi_overdecomp.py
+"""
+from repro.apps.jacobi2d import run_jacobi
+
+print("== overdecomposition under 200us/msg latency (4 PEs) ==")
+for odf in (1, 2, 4, 8):
+    out = run_jacobi(grid_size=512, n_pes=4, odf=odf, iters=12,
+                     comm_latency_s=200e-6)
+    print(f"  odf={odf}: {out.time_per_iter*1e3:7.2f} ms/iter")
+
+print("== rate-aware LB on heterogeneous PEs (c7i/c6a/c5a-like rates) ==")
+print("   (LULESH proxy: compute-bound, as in paper Fig 3b)")
+rates = [1.0, 0.85, 0.6, 1.0]
+for strat, aware in ((None, False), ("greedy_refine", False),
+                     ("greedy_refine", True)):
+    out = run_jacobi(grid_size=1024, n_pes=4, odf=4, iters=24,
+                     kernel="lulesh", pe_rate_multipliers=rates,
+                     lb_strategy=strat, lb_every=8, rate_aware=aware)
+    tail = out.per_iter[-8:]
+    tpi = sum(m["time_per_iter"] for m in tail) / len(tail)
+    label = "no LB" if strat is None else \
+        ("GreedyRefine rate-aware" if aware else "GreedyRefine rate-blind")
+    print(f"  {label:26s}: {tpi*1e3:7.2f} ms/iter (steady state)")

@@ -1,0 +1,17 @@
+"""Quickstart: train a small LM with the adaptive runtime (CPU, ~1 min).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_config, SHAPES
+from repro.launch.train import ElasticTrainer
+
+cfg = get_config("llama3.2-3b").reduced()         # small same-family config
+shape = SHAPES["train_4k"].reduced()
+
+trainer = ElasticTrainer(cfg, shape, n_devices=len(jax.devices()))
+out = trainer.train(n_steps=20, log_every=5)
+print(f"\ntrained 20 steps in {out['seconds']:.1f}s; "
+      f"final loss {out['final_loss']:.4f}")
+assert out["final_loss"] < 6.5, "loss should be at/below ln(vocab)"

@@ -1,0 +1,83 @@
+"""End-to-end driver: train an LM on a simulated spot fleet with the full
+adaptive runtime — elastic shrink/expand on interruption notices, proactive
+capacity rebalancing (Mode C), in-memory checkpointing, and bit-exact
+training continuity across rescales.
+
+One forced-host device == one "instance".  The CloudManager's event timeline
+(rebalance recommendation -> notice -> termination -> replacement) is mapped
+onto training steps; rescales are REAL: state is checkpointed to host
+memory, the mesh is rebuilt with the surviving devices, state is resharded,
+and training resumes on the exact next batch.
+
+    python examples/train_spot_elastic.py            # ~22M-param model
+    python examples/train_spot_elastic.py --full     # ~110M-param model
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import time      # noqa: E402
+
+import jax       # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.launch.train import ElasticTrainer            # noqa: E402
+
+
+def model_cfg(full: bool) -> ModelConfig:
+    if full:  # ~110M params (GPT-2-small class)
+        return ModelConfig(name="spot-demo-110m", family="dense",
+                           num_layers=12, d_model=768, num_heads=12,
+                           num_kv_heads=12, d_ff=3072, vocab_size=32768,
+                           num_microbatches=2)
+    return ModelConfig(name="spot-demo-22m", family="dense",
+                       num_layers=6, d_model=384, num_heads=6,
+                       num_kv_heads=6, d_ff=1536, vocab_size=16384,
+                       num_microbatches=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="~110M params")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    a = ap.parse_args()
+
+    cfg = model_cfg(a.full)
+    shape = ShapeConfig("train", a.seq, a.batch, "train")
+    n = len(jax.devices())
+    print(f"fleet: {n} instances (host devices); model {cfg.name}")
+
+    trainer = ElasticTrainer(cfg, shape, n_devices=n)
+
+    # --- phase 1: steady state
+    trainer.train(a.steps // 3, log_every=5)
+    loss_before = trainer.metrics_log[-1]["loss"]
+
+    # --- phase 2: two instances get rebalance recommendations -> notices.
+    # Mode C (proactive): replacements were requested at the recommendation;
+    # a SINGLE rescale swaps the doomed instances for replacements.  On this
+    # host the device count is fixed, so the swap is shrink->(replacement
+    # arrives)->expand with the expand driven by the capacity-rebalancing
+    # trigger; stage timings are real.
+    print("\n[cloud] rebalance recommendation on 2 instances "
+          "(proactive replacements requested)")
+    ev1 = trainer.rescale(n - 2)       # emergency shrink at the notice
+    trainer.train(a.steps // 3, log_every=5)
+    print("[cloud] replacements ready -> single expand rescale")
+    ev2 = trainer.rescale(n)
+    trainer.train(a.steps - 2 * (a.steps // 3), log_every=5)
+
+    print("\nrescale stage breakdown (seconds):")
+    for ev in trainer.runtime.events:
+        print(f"  {ev.kind:7s} {ev.from_devices}->{ev.to_devices}: "
+              + ", ".join(f"{k}={v:.3f}" for k, v in ev.stages.items()))
+    print(f"\nfinal loss {trainer.metrics_log[-1]['loss']:.4f} "
+          f"(pre-interruption {loss_before:.4f}); "
+          f"training continued across {len(trainer.runtime.events)} rescales")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Jacobi2D — the paper's benchmark application on the overdecomposed
+tile runtime (solves the Laplace equation; hot top edge).
+
+Drives HostTileRuntime (measured, heterogeneity/latency-injectable) and is
+used by benchmarks/bench_overdecomp.py (Fig 2) and bench_loadbalance.py
+(Fig 3).  The TPU-production SPMD path is core/spmd_stencil.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.overdecomp import (CommModel, HostTileRuntime, TileGrid,
+                                   choose_tiling)
+
+
+@dataclasses.dataclass
+class JacobiRun:
+    time_per_iter: float
+    per_iter: List[Dict[str, float]]
+    lb_events: List[dict]
+
+
+def run_jacobi(*, grid_size: int = 512, n_pes: int = 4, odf: int = 4,
+               iters: int = 20, kernel: str = "jacobi",
+               comm_latency_s: float = 0.0, comm_bw_Bps: float = float("inf"),
+               pe_rate_multipliers: Optional[Sequence[float]] = None,
+               lb_strategy: Optional[str] = None, lb_every: int = 10,
+               rate_aware: bool = True, warmup: int = 2) -> JacobiRun:
+    n_tiles = n_pes * odf
+    tr, tc = choose_tiling(n_tiles)
+    # grid must divide tiles; round up
+    H = ((grid_size + tr - 1) // tr) * tr
+    W = ((grid_size + tc - 1) // tc) * tc
+    rt = HostTileRuntime(
+        TileGrid(H, W, tr, tc), n_pes, kernel=kernel, odf=odf,
+        pe_rate_multipliers=pe_rate_multipliers,
+        comm=CommModel(comm_latency_s, comm_bw_Bps))
+    per_iter = []
+    lb_events = []
+    for it in range(iters):
+        m = rt.step()
+        if it >= warmup:
+            per_iter.append(m)
+        if lb_strategy and (it + 1) % lb_every == 0:
+            res = rt.load_balance(lb_strategy, rate_aware=rate_aware)
+            lb_events.append({"iter": it, "migrations": res.migrations,
+                              "makespan": res.makespan,
+                              "baseline": res.baseline_makespan})
+    tpi = float(np.mean([m["time_per_iter"] for m in per_iter]))
+    return JacobiRun(tpi, per_iter, lb_events)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", type=int, default=512)
+    ap.add_argument("--pes", type=int, default=4)
+    ap.add_argument("--odf", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--kernel", default="jacobi",
+                    choices=["jacobi", "lulesh"])
+    a = ap.parse_args()
+    out = run_jacobi(grid_size=a.grid, n_pes=a.pes, odf=a.odf,
+                     iters=a.iters, kernel=a.kernel)
+    print(f"time/iter = {out.time_per_iter*1e3:.2f} ms")

@@ -1,0 +1,10 @@
+"""The paper's contribution: adaptive runtime for cloud-native HPC.
+
+- overdecomp:    chare-style tile runtime (C1)
+- rates:         measured per-PE rate EWMA
+- loadbalance:   Greedy / GreedyRefine, rate-aware (C2)
+- elastic:       shrink/expand via in-memory checkpoint (II-B)
+- checkpointing: memory / device / filesystem stores (C3, C5)
+- cloud:         CloudManager with capacity rebalancing (C4)
+- spmd_stencil:  TPU-production shard_map stencil path
+"""

@@ -1,0 +1,25 @@
+"""jit'd flash-attention entry point (model layout: (B, S, H, D))."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_kv", "impl"))
+def attention(q, k, v, *, causal=True, block_q=512, block_kv=512,
+              impl="auto"):
+    """q: (B, S, H, D); k/v: (B, S, KV, D) -> (B, S, H, D)."""
+    qm = jnp.moveaxis(q, 1, 2)
+    km = jnp.moveaxis(k, 1, 2)
+    vm = jnp.moveaxis(v, 1, 2)
+    if impl == "ref":
+        out = flash_ref(qm, km, vm, causal=causal)
+    else:
+        interpret = jax.default_backend() == "cpu"
+        out = flash_attention(qm, km, vm, causal=causal, block_q=block_q,
+                              block_kv=block_kv, interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,17 @@
+"""Oracle for the flash-attention kernel: the model's own attention paths.
+
+``blockwise_attention`` (layers.py) is itself validated against
+``full_attention``; the Pallas kernel is validated against both.
+"""
+import jax.numpy as jnp
+
+from repro.models.layers import blockwise_attention, full_attention
+
+
+def flash_ref(q, k, v, *, causal=True):
+    """q: (B, H, S, D) heads-major -> (B, H, S, D), via full_attention."""
+    qm = jnp.moveaxis(q, 1, 2)   # (B, S, H, D)
+    km = jnp.moveaxis(k, 1, 2)
+    vm = jnp.moveaxis(v, 1, 2)
+    out = full_attention(qm, km, vm, causal=causal)
+    return jnp.moveaxis(out, 2, 1)

@@ -1,0 +1,2 @@
+from repro.kernels.jacobi.ops import jacobi
+from repro.kernels.jacobi.ref import jacobi_step_ref

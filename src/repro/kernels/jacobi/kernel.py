@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: 5-point Jacobi stencil (the paper's benchmark app).
+
+TPU adaptation of the paper's manually-tiled CPU/GPU loop: the grid is
+row-block tiled into VMEM; halo rows come from *neighbor row-blocks* mapped
+as two extra (block-granular) input views — prev/cur/next — since Pallas
+BlockSpecs index at block granularity.  Left/right halos are handled
+in-register by column shifts.  Boundary conditions (hot top edge = 1.0,
+others 0.0) are applied via program_id masking.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(prev_ref, cur_ref, next_ref, out_ref, *, bh: int):
+    i = pl.program_id(0)
+    n_blocks = pl.num_programs(0)
+    cur = cur_ref[...]                       # (bh, W)
+
+    # halo rows from the neighbor blocks (index maps clamp at the edges)
+    up_row = prev_ref[bh - 1, :]
+    down_row = next_ref[0, :]
+    # global boundary conditions
+    up_row = jnp.where(i == 0, jnp.ones_like(up_row), up_row)
+    down_row = jnp.where(i == n_blocks - 1, jnp.zeros_like(down_row),
+                         down_row)
+
+    up = jnp.concatenate([up_row[None, :], cur[:-1]], axis=0)
+    down = jnp.concatenate([cur[1:], down_row[None, :]], axis=0)
+    left = jnp.pad(cur[:, :-1], ((0, 0), (1, 0)))
+    right = jnp.pad(cur[:, 1:], ((0, 0), (0, 1)))
+    out_ref[...] = 0.25 * (up + down + left + right)
+
+
+def jacobi_step(grid: jax.Array, *, block_rows: int = 128,
+                interpret: bool = False) -> jax.Array:
+    """One Jacobi sweep over a (H, W) grid.
+
+    VMEM working set = 4 row-blocks (prev/cur/next/out) of (block_rows, W)
+    fp32; choose block_rows so 4 * block_rows * W * 4B fits ~16 MiB.
+    """
+    H, W = grid.shape
+    bh = min(block_rows, H)
+    assert H % bh == 0, (H, bh)
+    nb = H // bh
+
+    prev_spec = pl.BlockSpec((bh, W),
+                             lambda i: (jnp.maximum(i - 1, 0), 0))
+    cur_spec = pl.BlockSpec((bh, W), lambda i: (i, 0))
+    next_spec = pl.BlockSpec((bh, W),
+                             lambda i: (jnp.minimum(i + 1, nb - 1), 0))
+
+    return pl.pallas_call(
+        functools.partial(_jacobi_kernel, bh=bh),
+        grid=(nb,),
+        in_specs=[prev_spec, cur_spec, next_spec],
+        out_specs=pl.BlockSpec((bh, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), grid.dtype),
+        interpret=interpret,
+    )(grid, grid, grid)

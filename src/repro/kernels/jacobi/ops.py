@@ -1,0 +1,19 @@
+"""jit'd public entry point for the Jacobi Pallas kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on TPU
+it compiles to Mosaic.  ``impl='ref'`` selects the pure-jnp oracle.
+"""
+import functools
+
+import jax
+
+from repro.kernels.jacobi.kernel import jacobi_step
+from repro.kernels.jacobi.ref import jacobi_step_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_rows"))
+def jacobi(grid, *, impl: str = "auto", block_rows: int = 128):
+    if impl == "ref":
+        return jacobi_step_ref(grid)
+    interpret = jax.default_backend() == "cpu"
+    return jacobi_step(grid, block_rows=block_rows, interpret=interpret)

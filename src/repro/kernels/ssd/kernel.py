@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block (state-space duality).
+
+Computes, per (batch, chunk, head):
+
+  y_diag[i] = sum_{j<=i} (C_i . B_j) * exp(dAcs_i - dAcs_j) * dt_j * x_j
+  state     = sum_j exp(dAcs_last - dAcs_j) * dt_j * B_j (x) x_j
+
+i.e. the quadratic-within-chunk half of SSD; the (cheap) inter-chunk state
+recurrence stays a lax.scan in mamba2.py.  The kernel is matmul-dominated
+((l,l) x (l,p) on the MXU), which is exactly the SSD paper's point.
+
+Grid = (B, NC, H); blocks carry one chunk of one head:
+l=256, p<=128, n<=128 fp32 -> ~0.6 MiB VMEM working set.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, dacs_ref, b_ref, c_ref, y_ref, st_ref):
+    # blocks: x (1,1,l,1,p); dt/dacs (1,1,l,1); b/c (1,1,l,n)
+    x = x_ref[0, 0, :, 0, :]          # (l, p)
+    dt = dt_ref[0, 0, :, 0]           # (l,)
+    dacs = dacs_ref[0, 0, :, 0]       # (l,)
+    B = b_ref[0, 0]                   # (l, n)
+    C = c_ref[0, 0]                   # (l, n)
+    l = x.shape[0]
+
+    seg = dacs[:, None] - dacs[None, :]               # (l, l) i - j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.where(jj <= ii, jnp.exp(seg), 0.0)    # causal within chunk
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (l, l)
+    att = cb * decay
+    xdt = x * dt[:, None]                             # (l, p)
+    y_ref[0, 0, :, 0, :] = jax.lax.dot_general(
+        att, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    w = jnp.exp(dacs[l - 1] - dacs)                   # (l,)
+    bw = B * w[:, None]                               # (l, n); dt already in xdt
+    # state (p, n) = xdt^T @ bw
+    st_ref[0, 0, 0, :, :] = jax.lax.dot_general(
+        xdt, bw, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def ssd_intra_chunk(xr, dtr, dA_cs, Br, Cr, *, interpret: bool = False):
+    """xr: (b,nc,l,h,p) f32; dtr/dA_cs: (b,nc,l,h); Br/Cr: (b,nc,l,n).
+
+    Returns y_diag (b,nc,l,h,p), states (b,nc,h,p,n) — the same contract as
+    ``repro.models.mamba2.ssd_intra_chunk_ref``.
+    """
+    b, nc, l, h, p = xr.shape
+    n = Br.shape[-1]
+
+    grid = (b, nc, h)
+    y, st = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda ib, ic, ih: (ib, ic, 0, ih, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda ib, ic, ih: (ib, ic, 0, ih)),
+            pl.BlockSpec((1, 1, l, 1), lambda ib, ic, ih: (ib, ic, 0, ih)),
+            pl.BlockSpec((1, 1, l, n), lambda ib, ic, ih: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda ib, ic, ih: (ib, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, 1, p),
+                         lambda ib, ic, ih: (ib, ic, 0, ih, 0)),
+            pl.BlockSpec((1, 1, 1, p, n),
+                         lambda ib, ic, ih: (ib, ic, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xr, dtr, dA_cs, Br, Cr)
+    return y, st

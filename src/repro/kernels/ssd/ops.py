@@ -1,0 +1,15 @@
+"""jit'd SSD intra-chunk entry point (used by mamba2_block(impl='pallas'))."""
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_intra_chunk as _kernel
+from repro.kernels.ssd.ref import ssd_intra_chunk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ssd_intra_chunk(xr, dtr, dA_cs, Br, Cr, impl: str = "auto"):
+    if impl == "ref":
+        return ssd_intra_chunk_ref(xr, dtr, dA_cs, Br, Cr)
+    interpret = jax.default_backend() == "cpu"
+    return _kernel(xr, dtr, dA_cs, Br, Cr, interpret=interpret)

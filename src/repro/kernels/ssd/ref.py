@@ -1,0 +1,2 @@
+"""Oracle: the pure-jnp intra-chunk SSD from the model itself."""
+from repro.models.mamba2 import ssd_intra_chunk_ref

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything below is ordinary code.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable  # noqa: E402
+from repro.launch import hlo_analysis as H                 # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.sharding import ShardingRules, use_rules  # noqa: E402
+from repro.launch.specs import cell_fn, input_specs        # noqa: E402
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# --------------------------------------------------------------- compilation
+def compile_cell(cfg, shape, mesh, *, unroll=False, with_out_shardings=True,
+                 donate=False):
+    rules = ShardingRules(mesh)
+    spec = input_specs(cfg, shape, rules)
+    fn = cell_fn(cfg, shape, unroll=unroll)
+    kw = dict(in_shardings=spec["in_shardings"])
+    if with_out_shardings:
+        kw["out_shardings"] = spec["out_shardings"]
+        if donate and shape.kind == "train":
+            kw["donate_argnums"] = (0,)     # state in -> state out
+        elif donate and shape.kind == "decode":
+            kw["donate_argnums"] = (1,)     # KV cache / SSM state
+    with mesh, use_rules(rules):
+        t0 = time.time()
+        lowered = jax.jit(fn, **kw).lower(*spec["args"])
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    return compiled, dt
+
+
+def production_record(cfg, shape, mesh, donate=False):
+    compiled, dt = compile_cell(cfg, shape, mesh, donate=donate)
+    rec = {
+        "compile_s": round(dt, 2),
+        "memory": H.memory_stats(compiled),
+        # body-once caveat: qualitative collective schedule only
+        "raw_terms_body_once": H.extract_terms(compiled),
+        "n_devices": mesh.devices.size,
+    }
+    del compiled
+    return rec
+
+
+def _analysis_cfg(cfg, n_units, n_micro):
+    """Shrink the stack to ``n_units`` layer-units for an unrolled build."""
+    kw = dict(attn_impl="full", num_microbatches=n_micro)
+    if cfg.family == "enc_dec":
+        kw.update(enc_layers=n_units, dec_layers=n_units, num_layers=0)
+    elif cfg.family == "hybrid":
+        kw.update(num_layers=cfg.attn_every * n_units)
+    else:
+        kw.update(num_layers=n_units)
+    return cfg.with_(**kw)
+
+
+def production_units(cfg) -> int:
+    if cfg.family == "enc_dec":
+        return cfg.enc_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def analysis_points(cfg, shape, mesh):
+    """Unrolled small builds for linear cost extrapolation.
+
+    train: cost(L, M) = a + M*b + M*L*d  -> 3 points
+    other: cost(L)    = a + L*d          -> 2 points
+    """
+    pts = []
+    if shape.kind == "train":
+        per_micro = shape.global_batch // max(cfg.num_microbatches, 1)
+        combos = [(1, 1), (2, 1), (1, 2)]
+        for (L_, M_) in combos:
+            cfg_a = _analysis_cfg(cfg, L_, M_)
+            shape_a = shape.__class__(shape.name, shape.seq_len,
+                                      per_micro * M_, shape.kind)
+            compiled, dt = compile_cell(cfg_a, shape_a, mesh,
+                                        unroll=True,
+                                        with_out_shardings=False)
+            terms = H.extract_terms(compiled)
+            terms.update(L=L_, M=M_, compile_s=round(dt, 2))
+            pts.append(terms)
+            del compiled
+    else:
+        for L_ in (1, 2):
+            cfg_a = _analysis_cfg(cfg, L_, cfg.num_microbatches)
+            compiled, dt = compile_cell(cfg_a, shape, mesh, unroll=True,
+                                        with_out_shardings=False)
+            terms = H.extract_terms(compiled)
+            terms.update(L=L_, M=1, compile_s=round(dt, 2))
+            pts.append(terms)
+            del compiled
+    return pts
+
+
+# --------------------------------------------------------------- driver
+def run_cell(arch: str, shape_name: str, *, meshes=("single", "multi"),
+             analysis=True, out_dir: Path = ARTIFACT_DIR,
+             force=False, opts=()) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    donate = "donate" in opts
+    if "zero1" in opts:
+        cfg = cfg.with_(zero1=True)
+    if "overlapped" in opts:
+        cfg = cfg.with_(grad_schedule="overlapped")
+    if "bf16params" in opts:
+        cfg = cfg.with_(param_dtype="bfloat16")
+    for o in opts:
+        if o.startswith("micro="):
+            cfg = cfg.with_(num_microbatches=int(o.split("=")[1]))
+        if o.startswith("moe="):
+            cfg = cfg.with_(moe_impl=o.split("=")[1])
+    if "gradbf16" in opts:
+        cfg = cfg.with_(grad_reduce_dtype="bfloat16")
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec["skipped"] = why
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    try:
+        for mesh_kind in meshes:
+            mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+            rec[f"production_{mesh_kind}"] = production_record(
+                cfg, shape, mesh, donate=donate)
+        if analysis:
+            mesh = make_production_mesh(multi_pod=False)
+            rec["analysis_points"] = analysis_points(cfg, shape, mesh)
+            rec["production_L_units"] = production_units(cfg)
+            rec["production_M"] = (cfg.num_microbatches
+                                   if shape.kind == "train" else 1)
+        rec["ok"] = True
+    except Exception as e:  # a dry-run failure is a bug in our system
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACT_DIR))
+    ap.add_argument("--opt", default="",
+                    help="comma list: zero1,overlapped,donate,bf16params,"
+                         "micro=N")
+    args = ap.parse_args()
+
+    meshes = {"both": ("single", "multi"), "single": ("single",),
+              "multi": ("multi",)}[args.mesh]
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            t0 = time.time()
+            rec = run_cell(arch, shape_name, meshes=meshes,
+                           analysis=not args.no_analysis,
+                           out_dir=Path(args.out), force=args.force,
+                           opts=tuple(o for o in args.opt.split(",") if o))
+            status = ("SKIP " + rec["skipped"] if "skipped" in rec
+                      else "OK" if rec.get("ok") else
+                      "FAIL " + rec.get("error", "?"))
+            print(f"[{time.time()-t0:7.1f}s] {arch:22s} {shape_name:12s} "
+                  f"{status}", flush=True)
+            if not rec.get("ok") and "skipped" not in rec:
+                n_fail += 1
+    print(f"done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis()`` supplies HLO FLOPs / bytes; collective traffic is parsed
+from the compiled HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute result sizes + replica-group sizes).
+
+CAVEAT (measured, see DESIGN.md §6): XLA counts a while-loop body ONCE.  The
+dry-run therefore lowers *unrolled* analysis builds at two (layers,
+microbatch) points and extrapolates linearly; this module only extracts raw
+terms from one artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+# TPU v5e-class constants (per assignment)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    result_bytes: int
+    group_size: int
+
+
+def parse_collectives(hlo_text: str) -> List[Collective]:
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        rb = shape_bytes(m.group(1))
+        g = 1
+        mi = _GROUPS_IOTA_RE.search(line)
+        if mi:
+            g = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(line)
+            if ml:
+                g = len([x for x in ml.group(1).split(",") if x.strip()])
+        out.append(Collective(m.group(2), rb, max(g, 1)))
+    return out
+
+
+def wire_bytes_per_device(c: Collective) -> float:
+    """Ring-algorithm bytes each device puts on ICI links.
+
+    ``result_bytes`` is the full (global logical) result size as printed in
+    the *partitioned* HLO, i.e. already the per-device tensor for most ops.
+    """
+    g = c.group_size
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if c.kind == "all-gather":
+        # per-device output is g x input; each device sends input*(g-1)
+        return c.result_bytes * frac
+    if c.kind == "reduce-scatter":
+        return c.result_bytes * (g - 1)
+    if c.kind == "all-reduce":
+        return 2.0 * c.result_bytes * frac
+    if c.kind == "all-to-all":
+        return c.result_bytes * frac
+    if c.kind == "collective-permute":
+        return float(c.result_bytes)
+    return 0.0
+
+
+def collective_summary(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    colls = parse_collectives(hlo_text)
+    summary: Dict[str, Dict[str, float]] = {}
+    for c in colls:
+        s = summary.setdefault(c.kind, {"count": 0, "result_bytes": 0,
+                                        "wire_bytes": 0.0})
+        s["count"] += 1
+        s["result_bytes"] += c.result_bytes
+        s["wire_bytes"] += wire_bytes_per_device(c)
+    return summary
+
+
+def total_wire_bytes(summary: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["wire_bytes"] for s in summary.values())
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / ICI_BW
+
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant(),
+        }
+
+
+def extract_terms(compiled) -> Dict[str, float]:
+    """Raw per-artifact terms (body-once caveat applies to loops)."""
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    summ = collective_summary(txt)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": summ,
+        "wire_bytes": total_wire_bytes(summ),
+    }
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_hbm_estimate": (ma.argument_size_in_bytes
+                              + ma.output_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              - ma.alias_size_in_bytes),
+    }

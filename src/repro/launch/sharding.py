@@ -1,0 +1,171 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Models annotate tensors with *logical* axis names; this module maps them to
+mesh axes. jit *input* shardings must divide evenly (verified on jax 0.8.2),
+so ``logical_to_spec`` checks divisibility and falls back:
+
+  batch        -> ("pod", "data")          (always divides for assigned shapes)
+  embed        -> None (activations) / "model" for embedding tables' d_model
+  vocab        -> "model", fallback: replicate (vocab stays whole, the
+                  d_model dim of the table is sharded instead via 'embed_tp')
+  heads        -> "model" if divisible else replicate   (llama3.2 24H)
+  kv_heads     -> "model" if divisible else replicate
+  ff / expert_ff -> "model"
+  experts      -> "model" if divisible else replicate (qwen2's 60 experts;
+                  its expert_ff fallback still gives the layer a TP dim)
+  cache_seq    -> "model"   (decode KV caches: 32768 / 524288 divide 16)
+  d_inner / conv_dim / ssm_heads -> "model" if divisible
+
+Inside jit, ``constrain`` applies with_sharding_constraint with the active
+rules; with no active mesh it is a no-op so the same model runs on CPU.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+class ShardingRules:
+    """Maps logical axis names -> mesh axis names with divisibility checks."""
+
+    # logical name -> preferred mesh axes (tuple entries = multi-axis)
+    PREFERRED = {
+        "batch": ("pod", "data"),
+        "vocab": ("model",),
+        "embed_tp": ("model",),      # embedding-table d_model fallback dim
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": None,   # contraction-dim TP measured 30x worse than
+        # replicated attention for llama 24H (EXPERIMENTS.md §Perf h4): the
+        # per-layer activation all-reduces dwarf the saved compute
+        "ff": ("model",),
+        "expert_ff": ("model",),
+        "experts": ("model",),
+        "cache_seq": ("model",),
+        "cache_batch": ("pod", "data"),
+        "d_inner": ("model",),
+        "conv_dim": ("model",),
+        "ssm_heads": ("model",),
+        "ssm_state": None,
+        "embed": None,               # activation d_model: replicated
+        "seq": None,
+        "layers": None,
+        "periods": None,
+        "stack": None,
+        None: None,
+    }
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.axes = set(mesh.axis_names)
+
+    def mesh_axes_for(self, logical: Optional[str], dim_size: int):
+        pref = self.PREFERRED.get(logical, None)
+        if pref is None:
+            return None
+        present = tuple(a for a in pref if a in self.axes)
+        if not present:
+            return None
+        if dim_size % _axis_size(self.mesh, present) != 0:
+            return None  # fallback: replicate this dim
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        # earlier dims take priority; a mesh axis is used at most once
+        used = set()
+        parts = []
+        for ax, d in zip(logical_axes, shape):
+            m = self.mesh_axes_for(ax, d)
+            names = (m,) if isinstance(m, str) else (m or ())
+            if m is None or any(n in used for n in names):
+                parts.append(None)
+            else:
+                used.update(names)
+                parts.append(m)
+        return P(*parts)
+
+    def sharding(self, logical_axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+@contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical names; no-op without active rules."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def param_shardings(rules: ShardingRules, schema):
+    """Pytree of NamedShardings for a param schema (models/schema.py)."""
+    from repro.models.schema import Spec, is_spec
+    return jax.tree.map(lambda s: rules.sharding(s.axes, s.shape),
+                        schema, is_leaf=is_spec)
+
+
+def zero1_extend(sharding: NamedSharding, shape, rules: ShardingRules):
+    """Additionally shard one dim over 'data' (ZeRO-1 optimizer state /
+    reduce-scattered gradient accumulation)."""
+    if "data" not in rules.axes:
+        return sharding
+    dsize = rules.mesh.shape["data"]
+    parts = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
+    for i, (p, d) in enumerate(zip(parts, shape)):
+        if p is None and d % dsize == 0:
+            parts[i] = "data"
+            return NamedSharding(rules.mesh, P(*parts))
+        if p is not None:
+            cur = (p,) if isinstance(p, str) else tuple(p)
+            if "data" not in cur and "pod" not in cur:
+                total = dsize
+                for a in cur:
+                    total *= rules.mesh.shape[a]
+                if d % total == 0:
+                    parts[i] = cur + ("data",)
+                    return NamedSharding(rules.mesh, P(*parts))
+    return sharding
+
+
+def zero1_shardings(rules: ShardingRules, schema):
+    """Param shardings additionally scattered over 'data' (ZeRO-1)."""
+    from repro.models.schema import Spec, is_spec
+    psh = param_shardings(rules, schema)
+    return jax.tree.map(
+        lambda s, spec: zero1_extend(s, spec.shape, rules),
+        psh, schema, is_leaf=lambda x: isinstance(x, NamedSharding))

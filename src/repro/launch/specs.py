@@ -1,0 +1,118 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings per (arch x shape).
+
+Shardings for jit *inputs* must divide evenly; ShardingRules guarantees that
+(launch/sharding.py).  No device allocation happens here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.sharding import (ShardingRules, param_shardings,
+                                   zero1_extend, zero1_shardings)
+from repro.models import model_zoo as zoo
+from repro.models import transformer as T
+from repro.models.schema import Spec, is_spec
+from repro.optim.adamw import AdamWState
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    rules: ShardingRules):
+    spec = zoo.batch_spec(cfg, shape)
+    return {
+        k: rules.sharding(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+        for k, v in spec.items()
+    }
+
+
+def params_shardings(cfg: ModelConfig, rules: ShardingRules):
+    return param_shardings(rules, T.model_schema(cfg))
+
+
+_zero1_extend = zero1_extend  # re-export (tests import from here)
+
+
+def state_shardings(cfg: ModelConfig, rules: ShardingRules):
+    psh = params_shardings(cfg, rules)
+    sch = T.model_schema(cfg)
+    if cfg.zero1:
+        opt_one = zero1_shardings(rules, sch)
+    else:
+        opt_one = psh
+    return zoo.TrainState(
+        step=NamedSharding(rules.mesh, P()),
+        params=psh,
+        opt=AdamWState(m=opt_one, v=opt_one),
+    )
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                           rules: ShardingRules):
+    ab = zoo.abstract_decode_state(cfg, shape)
+    ax = zoo.decode_state_logical_axes(cfg)
+    cache_sh = jax.tree.map(
+        lambda s, a: rules.sharding(a, s.shape), ab.cache, ax.cache,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return zoo.DecodeState(cache_sh,
+                           rules.sharding(ax.cache_len,
+                                          (shape.global_batch,)))
+
+
+def metrics_shardings(rules: ShardingRules):
+    rep = NamedSharding(rules.mesh, P())
+    return {k: rep for k in ("loss", "nll", "aux", "grad_norm")}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rules: ShardingRules) -> Dict[str, Any]:
+    """Everything dryrun/train/serve needs to lower a cell.
+
+    Returns dict with: kind, abstract args, in_shardings, out_shardings.
+    """
+    if shape.kind == "train":
+        args = (zoo.abstract_state(cfg), zoo.batch_spec(cfg, shape))
+        in_sh = (state_shardings(cfg, rules), batch_shardings(cfg, shape,
+                                                              rules))
+        out_sh = (state_shardings(cfg, rules), metrics_shardings(rules))
+        return dict(kind="train", args=args, in_shardings=in_sh,
+                    out_shardings=out_sh)
+    if shape.kind == "prefill":
+        params = T.model_schema(cfg)
+        from repro.models.schema import abstract_params
+        args = (abstract_params(params, cfg.param_dtype),
+                zoo.batch_spec(cfg, shape))
+        rep = NamedSharding(rules.mesh, P())
+        in_sh = (params_shardings(cfg, rules),
+                 batch_shardings(cfg, shape, rules))
+        out_sh = (rep, decode_state_shardings(cfg, shape, rules))
+        return dict(kind="prefill", args=args, in_shardings=in_sh,
+                    out_shardings=out_sh)
+    if shape.kind == "decode":
+        from repro.models.schema import abstract_params
+        params = abstract_params(T.model_schema(cfg), cfg.param_dtype)
+        args = (params, zoo.abstract_decode_state(cfg, shape),
+                zoo.batch_spec(cfg, shape))
+        rep = NamedSharding(rules.mesh, P())
+        dsh = decode_state_shardings(cfg, shape, rules)
+        in_sh = (params_shardings(cfg, rules), dsh,
+                 batch_shardings(cfg, shape, rules))
+        out_sh = (rep, dsh)
+        return dict(kind="decode", args=args, in_shardings=in_sh,
+                    out_shardings=out_sh)
+    raise ValueError(shape.kind)
+
+
+def cell_fn(cfg: ModelConfig, shape: ShapeConfig, *, unroll=False):
+    """The function lowered for a cell."""
+    if shape.kind == "train":
+        return zoo.make_train_step(cfg, unroll=unroll)
+    if shape.kind == "prefill":
+        return zoo.make_prefill(cfg, shape, unroll=unroll)
+    if shape.kind == "decode":
+        return zoo.make_serve_step(cfg, shape, unroll=unroll)
+    raise ValueError(shape.kind)

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD form: within a chunk the output is a
+(masked) quadratic attention-like product; across chunks a small recurrent
+state (H heads x P head_dim x N ssm_state) is passed.  Decode is the O(1)
+per-token recurrence on that state.  The chunk kernel has a Pallas TPU
+implementation in kernels/ssd/ validated against the pure-jnp path here.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+from repro.models.schema import Spec
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner
+    nheads = cfg.ssm_heads
+    conv_dim = d_inner + 2 * cfg.ssm_state  # x + B + C (single group)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + nheads  # z,x,B,C,dt
+    return d_inner, nheads, conv_dim, d_in_proj
+
+
+def mamba2_schema(cfg: ModelConfig, stacked: Optional[tuple] = None,
+                  prefix: Tuple[str, ...] = ()):
+    st = tuple(stacked) if stacked is not None else ()
+    sa = tuple(prefix) if stacked is not None else ()
+    d = cfg.d_model
+    d_inner, nheads, conv_dim, d_in_proj = mamba2_dims(cfg)
+    return {
+        "norm": Spec(st + (d,), sa + (None,), "ones"),
+        "in_proj": Spec(st + (d, d_in_proj), sa + ("embed", "d_inner")),
+        "conv_w": Spec(st + (cfg.conv_width, conv_dim),
+                       sa + (None, "conv_dim")),
+        "conv_b": Spec(st + (conv_dim,), sa + (None,), "zeros"),
+        "A_log": Spec(st + (nheads,), sa + (None,), "ssm_a"),
+        "D": Spec(st + (nheads,), sa + (None,), "ones"),
+        "dt_bias": Spec(st + (nheads,), sa + (None,), "ssm_dt"),
+        "ssm_norm": Spec(st + (d_inner,), sa + (None,), "ones"),
+        "out_proj": Spec(st + (d_inner, d), sa + ("d_inner", "embed")),
+    }
+
+
+# ----------------------------------------------------------------- SSD core
+def ssd_chunked(x, dt, A, B, C, chunk: int, impl: str = "jnp"):
+    """Chunked SSD scan.
+
+    x:  (b, s, h, p)   — per-head inputs
+    dt: (b, s, h)      — positive step sizes
+    A:  (h,)           — negative decay rates (A = -exp(A_log))
+    B:  (b, s, n)      — input projection (single group, shared over heads)
+    C:  (b, s, n)      — output projection
+    Returns y: (b, s, h, p), final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(f32)
+    Br = B.reshape(b, nc, chunk, n).astype(f32)
+    Cr = C.reshape(b, nc, chunk, n).astype(f32)
+    dA = dtr * A.astype(f32)                      # (b,nc,l,h) negative
+    dA_cs = jnp.cumsum(dA, axis=2)                # within-chunk cumsum
+
+    if impl == "pallas":
+        from repro.kernels.ssd import ops as ssd_ops
+        y_diag, chunk_states = ssd_ops.ssd_intra_chunk(xr, dtr, dA_cs, Br, Cr)
+    else:
+        y_diag, chunk_states = ssd_intra_chunk_ref(xr, dtr, dA_cs, Br, Cr)
+
+    # inter-chunk recurrence on states: (b, nc, h, p, n)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1])        # (b,nc,h) total chunk decay
+
+    def scan_fn(state, inp):
+        st_c, decay = inp                          # (b,h,p,n), (b,h)
+        new = state * decay[..., None, None] + st_c
+        return new, state                          # emit state *entering* chunk
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n)
+
+    # contribution of the entering state to each position in the chunk
+    state_decay = jnp.exp(dA_cs)                   # (b,nc,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cr, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_intra_chunk_ref(xr, dtr, dA_cs, Br, Cr):
+    """Pure-jnp intra-chunk SSD (the Pallas kernel oracle).
+
+    xr: (b,nc,l,h,p) f32; dtr: (b,nc,l,h); dA_cs: (b,nc,l,h) cumsum of dt*A;
+    Br, Cr: (b,nc,l,n).
+    Returns y_diag (b,nc,l,h,p) and per-chunk state contributions
+    (b,nc,h,p,n).
+    """
+    # decay from position j to i (i >= j): exp(dA_cs[i] - dA_cs[j])
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # (b,nc,i,j,h)
+    l = xr.shape[2]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)                 # (b,nc,i,j)
+    att = cb[..., None] * decay                                # (b,nc,i,j,h)
+    xdt = xr * dtr[..., None]                                  # (b,nc,l,h,p)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", att, xdt)
+    # state contribution of this chunk: sum_j exp(dA_cs[-1]-dA_cs[j]) B_j x_j
+    last = dA_cs[:, :, -1:, :]                                 # (b,nc,1,h)
+    w = jnp.exp(last - dA_cs)                                  # (b,nc,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Br, w, xdt)
+    return y_diag, states
+
+
+# ----------------------------------------------------------------- block
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d, width W. xBC: (b, s, c); conv_w: (W, c).
+
+    With ``conv_state`` (b, W-1, c) performs streaming decode conv and
+    returns the updated state.
+    """
+    w = conv_w.shape[0]
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xBC], axis=1)   # (b, W-1+s, c)
+        new_state = window[:, -(w - 1):]
+    else:
+        pad = jnp.zeros(xBC.shape[:1] + (w - 1,) + xBC.shape[2:], xBC.dtype)
+        window = jnp.concatenate([pad, xBC], axis=1)
+        new_state = window[:, -(w - 1):]
+    out = sum(window[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(w))
+    return jax.nn.silu(out + conv_b[None, None]), new_state
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
+                 impl: str = "jnp", active=None):
+    """Full Mamba2 block. x: (b, s, d).
+
+    Training/prefill: ssm_state/conv_state None -> chunked SSD.
+    Decode: states provided (s==1) -> recurrent update; returns
+    (out, (ssm_state, conv_state)).
+    """
+    dt_c = jnp.dtype(cfg.compute_dtype)
+    b, s, d = x.shape
+    d_inner, nheads, conv_dim, _ = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    hp = cfg.ssm_head_dim
+
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps).astype(dt_c)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_c))
+    proj = constrain(proj, "batch", None, "d_inner")
+    z, xBC, dt_raw = jnp.split(
+        proj, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (b,s,h)
+
+    decoding = ssm_state is not None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(dt_c),
+                                 p["conv_b"].astype(dt_c),
+                                 conv_state if decoding else None)
+    xs, B, C = jnp.split(xBC, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(b, s, nheads, hp)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (h,)
+
+    if not decoding:
+        y, final_state = ssd_chunked(xh, dt, A, B, C,
+                                     min(cfg.ssm_chunk, s), impl=impl)
+        new_ssm = final_state
+        # new_conv (the last W-1 pre-conv activations) enables exact
+        # streaming decode right after a chunked prefill
+    else:
+        # single-token recurrence: state (b,h,p,n)
+        dA = jnp.exp(dt[:, 0] * A[None])                       # (b,h)
+        xdt = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+        upd = jnp.einsum("bhp,bn->bhpn", xdt, B[:, 0].astype(jnp.float32))
+        new_ssm = ssm_state * dA[..., None, None] + upd
+        if active is not None:
+            new_ssm = jnp.where(active[:, None, None, None], new_ssm,
+                                ssm_state)
+            new_conv = jnp.where(active[:, None, None], new_conv,
+                                 conv_state)
+        y = jnp.einsum("bhpn,bn->bhp", new_ssm,
+                       C[:, 0].astype(jnp.float32))[:, None]
+        y = y.reshape(b, 1, nheads, hp).astype(dt_c)
+
+    y = y + xh * p["D"].astype(dt_c)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z)                                     # gated
+    y = L.rms_norm(y, p["ssm_norm"], cfg.norm_eps).astype(dt_c)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt_c))
+    out = x + constrain(out, "batch", None, "embed")
+    return out, (new_ssm, new_conv)

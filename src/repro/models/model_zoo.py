@@ -1,0 +1,527 @@
+"""Task-level model API: loss / train_step / prefill / serve_step per arch.
+
+Everything here is functional and mesh-agnostic; sharding enters only through
+(a) in/out shardings chosen by the launcher and (b) logical-axis constraints
+inside the model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as ssm_lib
+from repro.models import transformer as T
+from repro.models.schema import (abstract_params, count_params, init_params,
+                                 param_logical_axes)
+from repro.optim import adamw
+
+
+def _scan(body, init, xs, unroll=False):
+    """lax.scan, or a fully unrolled Python loop for analysis builds."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(length):
+        carry, y = body(carry, jax.tree.map(lambda x: x[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = ()
+    return carry, ys
+
+
+# ============================================================== batches
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract input batch (ShapeDtypeStructs) for a (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.family == "enc_dec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            st = S - cfg.frontend_seq
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, st), i32),
+                "labels": jax.ShapeDtypeStruct((B, st), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.family == "enc_dec":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - cfg.frontend_seq), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "active": jax.ShapeDtypeStruct((B,), i32)}
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng) -> Dict[str, Any]:
+    """Concrete random batch matching ``batch_spec`` (smoke tests)."""
+    spec = batch_spec(cfg, shape)
+    out = {}
+    for k, v in spec.items():
+        rng, sub = jax.random.split(rng)
+        if k == "active":
+            out[k] = jnp.ones(v.shape, jnp.int32)
+        elif v.dtype == jnp.int32:
+            out[k] = jax.random.randint(sub, v.shape, 0, cfg.vocab_size,
+                                        jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(
+                v.dtype)
+    return out
+
+
+# ============================================================== loss
+def lm_loss(params, batch, cfg: ModelConfig, *, unroll=False):
+    """Causal-LM cross-entropy (mean over tokens) + MoE aux loss."""
+    if cfg.family == "enc_dec":
+        h = T.enc_dec_forward(params, batch["frames"], batch["tokens"], cfg,
+                              unroll=unroll)
+        aux = jnp.zeros((), jnp.float32)
+        labels = batch["labels"]
+    elif cfg.family == "vlm":
+        h, aux = T.decoder_forward(params, batch["tokens"], cfg,
+                                   patch_embeds=batch["patch_embeds"],
+                                   unroll=unroll)
+        h = h[:, cfg.frontend_seq:]           # loss only on text positions
+        labels = batch["labels"]
+    else:
+        h, aux = T.decoder_forward(params, batch["tokens"], cfg,
+                                   unroll=unroll)
+        labels = batch["labels"]
+    logits = T.lm_logits(params, h, cfg)      # (B, S, V) fp32
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean() + aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ============================================================== train state
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: adamw.AdamWState
+
+
+def init_state(cfg: ModelConfig, rng) -> TrainState:
+    sch = T.model_schema(cfg)
+    params = init_params(sch, rng, cfg.param_dtype)
+    return TrainState(jnp.zeros((), jnp.int32), params, adamw.init(params))
+
+
+def abstract_state(cfg: ModelConfig) -> TrainState:
+    sch = T.model_schema(cfg)
+    params = abstract_params(sch, cfg.param_dtype)
+    return TrainState(
+        jax.ShapeDtypeStruct((), jnp.int32), params,
+        adamw.abstract_init(params))
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return count_params(T.model_schema(cfg))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: routed top_k of num_experts)."""
+    total = num_params(cfg)
+    if cfg.family != "moe":
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    routed = cfg.num_layers * cfg.num_experts * per_expert
+    active = cfg.num_layers * cfg.top_k * per_expert
+    return total - routed + active
+
+
+# ============================================================== train step
+def make_train_step(cfg: ModelConfig, hp: Optional[adamw.HParams] = None,
+                    unroll: bool = False):
+    hp = hp or adamw.HParams()
+
+    def train_step(state: TrainState, batch):
+        n_micro = max(cfg.num_microbatches, 1)
+
+        def reshape_micro(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+        micro = jax.tree.map(reshape_micro, batch)
+        loss_grad = jax.value_and_grad(
+            lambda p, mb: lm_loss(p, mb, cfg, unroll=unroll), has_aux=True)
+
+        def accum(carry, mb):
+            gacc, lacc = carry
+            (loss, metrics), grads = loss_grad(state.params, mb)
+            if cfg.grad_schedule == "overlapped":
+                # C1 analogue: per-microbatch reduce-scatter over the data
+                # axis -> XLA overlaps collective i with compute of i+1.
+                grads = _scatter_grads(grads, cfg)
+            gacc = jax.tree.map(jnp.add, gacc, grads)
+            return (gacc, lacc + loss), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        if cfg.grad_schedule == "overlapped":
+            zeros = _scatter_grads(zeros, cfg)
+        if unroll:
+            # analysis builds: straight-line HLO so cost_analysis counts
+            # every microbatch (XLA counts a while body once)
+            carry = (zeros, jnp.zeros((), jnp.float32))
+            ms = []
+            for i in range(n_micro):
+                carry, mtr = accum(carry,
+                                   jax.tree.map(lambda x: x[i], micro))
+                ms.append(mtr)
+            gsum, lsum = carry
+            metrics = jax.tree.map(lambda *x: jnp.stack(x), *ms)
+        else:
+            (gsum, lsum), metrics = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        if cfg.grad_reduce_dtype == "bfloat16":
+            # gradient compression: local accumulation stays f32; the
+            # cross-data-axis reduction happens on bf16 (half the wire)
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        loss = lsum / n_micro
+
+        params, opt = adamw.update(state.params, grads, state.opt,
+                                   state.step, hp)
+        new_state = TrainState(state.step + 1, params, opt)
+        out_metrics = {"loss": loss,
+                       "nll": metrics["nll"].mean(),
+                       "aux": metrics["aux"].mean(),
+                       "grad_norm": adamw.global_norm(grads)}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def _scatter_grads(grads, cfg: ModelConfig):
+    """Constrain grad leaves to the ZeRO-1 (data-scattered) shardings so
+    GSPMD lowers the per-microbatch reduction as an (overlappable)
+    reduce-scatter instead of one fused terminal all-reduce — and the
+    scattered accumulation matches the optimizer-state sharding exactly
+    (no extra reshard at the update)."""
+    from repro.launch.sharding import active_rules, zero1_shardings
+    rules = active_rules()
+    if rules is None or "data" not in rules.axes:
+        return grads
+    sch = T.model_schema(cfg)
+    zsh = zero1_shardings(rules, sch)
+    return jax.tree.map(jax.lax.with_sharding_constraint, grads, zsh)
+
+
+# ============================================================== serving
+class DecodeState(NamedTuple):
+    """Per-family decode state; unused fields are empty dicts/arrays."""
+    cache: Any            # family-specific pytree
+    cache_len: jax.Array  # (B,) filled positions
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    bf16 = jnp.bfloat16
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+    d_inner, nheads, conv_dim, _ = ssm_lib.mamba2_dims(cfg)
+    N, P_ = cfg.ssm_state, cfg.ssm_head_dim
+
+    def sds(shp, dt=bf16):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache = {"k": sds((cfg.num_layers, B, S, KV, D)),
+                 "v": sds((cfg.num_layers, B, S, KV, D))}
+    elif cfg.family == "enc_dec":
+        cache = {"k": sds((cfg.dec_layers, B, S, KV, D)),
+                 "v": sds((cfg.dec_layers, B, S, KV, D)),
+                 "xk": sds((cfg.dec_layers, B, S, KV, D)),
+                 "xv": sds((cfg.dec_layers, B, S, KV, D))}
+    elif cfg.family == "ssm":
+        cache = {"ssm": sds((cfg.num_layers, B, nheads, P_, N), jnp.float32),
+                 "conv": sds((cfg.num_layers, B, cfg.conv_width - 1,
+                              conv_dim))}
+    elif cfg.family == "hybrid":
+        periods = cfg.num_layers // cfg.attn_every
+        cache = {"ssm": sds((periods, cfg.attn_every, B, nheads, P_, N),
+                            jnp.float32),
+                 "conv": sds((periods, cfg.attn_every, B,
+                              cfg.conv_width - 1, conv_dim)),
+                 "k": sds((periods, B, S, KV, D)),
+                 "v": sds((periods, B, S, KV, D))}
+    else:
+        raise ValueError(cfg.family)
+    return DecodeState(cache, jax.ShapeDtypeStruct((B,), jnp.int32))
+
+
+def init_decode_state(cfg: ModelConfig, shape: ShapeConfig,
+                      fill_len: Optional[int] = None) -> DecodeState:
+    ab = abstract_decode_state(cfg, shape)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab.cache)
+    fl = shape.seq_len - 1 if fill_len is None else fill_len
+    return DecodeState(cache, jnp.full((shape.global_batch,), fl, jnp.int32))
+
+
+def decode_state_logical_axes(cfg: ModelConfig):
+    """Logical axes for the decode-state pytree (for shardings)."""
+    kv4 = (None, "cache_batch", "cache_seq", "kv_heads", None)
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache = {"k": kv4, "v": kv4}
+    elif cfg.family == "enc_dec":
+        cache = {"k": kv4, "v": kv4, "xk": kv4, "xv": kv4}
+    elif cfg.family == "ssm":
+        cache = {"ssm": (None, "cache_batch", "ssm_heads", None, None),
+                 "conv": (None, "cache_batch", None, "conv_dim")}
+    elif cfg.family == "hybrid":
+        cache = {"ssm": (None, None, "cache_batch", "ssm_heads", None, None),
+                 "conv": (None, None, "cache_batch", None, "conv_dim"),
+                 "k": (None, "cache_batch", "cache_seq", "kv_heads", None),
+                 "v": (None, "cache_batch", "cache_seq", "kv_heads", None)}
+    else:
+        raise ValueError(cfg.family)
+    return DecodeState(cache, ("cache_batch",))
+
+
+# -------------------------------------------------------------- prefill
+def make_prefill(cfg: ModelConfig, shape: ShapeConfig, unroll: bool = False):
+    """Returns fn(params, batch) -> (last_logits, DecodeState)."""
+
+    def prefill(params, batch):
+        B = shape.global_batch
+        if cfg.family in ("dense", "vlm", "moe"):
+            h, caches = _decoder_prefill(params, batch, cfg, unroll)
+            cache = caches
+        elif cfg.family == "enc_dec":
+            h, cache = _encdec_prefill(params, batch, cfg, unroll)
+        elif cfg.family in ("ssm", "hybrid"):
+            h, cache = _ssm_prefill(params, batch, cfg, unroll)
+        else:
+            raise ValueError(cfg.family)
+        logits = T.lm_logits(params, h[:, -1:], cfg)
+        cache_len = jnp.full((B,), _prefill_len(cfg, shape), jnp.int32)
+        return logits, DecodeState(cache, cache_len)
+
+    return prefill
+
+
+def _prefill_len(cfg, shape):
+    return shape.seq_len
+
+
+def _decoder_prefill(params, batch, cfg, unroll):
+    tokens = batch["tokens"]
+    h = T.embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm":
+        pe = constrain(batch["patch_embeds"].astype(h.dtype),
+                       "batch", None, "embed")
+        h = jnp.concatenate([pe, h], axis=1)
+    S = h.shape[1]
+
+    def body(carry, lp):
+        x = carry
+        x, kv = L.attention_block(lp["attn"], x, cfg, causal=True)
+        if cfg.family == "moe":
+            from repro.models import moe as moe_lib
+            x, _ = moe_lib.moe_block(lp["moe"], x, cfg)
+        else:
+            x = L.swiglu_block(lp["mlp"], x, cfg)
+        k, v = kv
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    if unroll:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            h, (k, v) = body(h, jax.tree.map(lambda x: x[i], params["layers"]))
+            ks.append(k); vs.append(v)
+        cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+    else:
+        h, (ks, vs) = jax.lax.scan(body, h, params["layers"])
+        cache = {"k": ks, "v": vs}
+    return h, cache
+
+
+def _encdec_prefill(params, batch, cfg, unroll):
+    enc_out = T.encoder_forward(params, batch["frames"], cfg, unroll=unroll)
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = T.embed_tokens(params, batch["tokens"], cfg)
+
+    def body(carry, lp):
+        x = carry
+        x, kv = L.attention_block(lp["self_attn"], x, cfg, causal=True)
+        ca = lp["cross_attn"]
+        hn = L.rms_norm(x, ca["norm"], cfg.norm_eps).astype(dt)
+        q = jnp.einsum("bsd,dhk->bshk", hn, ca["wq"].astype(dt))
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt),
+                        ca["wk"].astype(dt))
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt),
+                        ca["wv"].astype(dt))
+        att = L.full_attention(q, xk, xv, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", att, ca["wo"].astype(dt))
+        x = L.swiglu_block(lp["mlp"], x, cfg)
+        k, v = kv
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                   xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16))
+
+    h, (ks, vs, xks, xvs) = _scan(body, h, params["dec_layers"],
+                                  unroll=unroll)
+    return h, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+
+def _ssm_prefill(params, batch, cfg, unroll):
+    h = T.embed_tokens(params, batch["tokens"], cfg)
+    W = cfg.conv_width
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            x = carry
+            x, (st, conv_tail) = ssm_lib.mamba2_block(lp, x, cfg)
+            return x, (st, conv_tail)
+        h, (ssm_states, convs) = _scan(body, h, params["layers"],
+                                       unroll=unroll)
+        return h, {"ssm": ssm_states.astype(jnp.float32),
+                   "conv": convs.astype(jnp.bfloat16)}
+    else:  # hybrid
+        periods = cfg.num_layers // cfg.attn_every
+        shared = params["shared"]
+
+        def period_body(carry, pp):
+            x = carry
+            def inner(c, lp):
+                c, (st, conv_tail) = ssm_lib.mamba2_block(lp, c, cfg)
+                return c, (st, conv_tail)
+            x, (sts, convs) = _scan(inner, x, pp, unroll=unroll)
+            x, kv = L.attention_block(shared["attn"], x, cfg, causal=True)
+            x = L.swiglu_block(shared["mlp"], x, cfg)
+            k, v = kv
+            return x, (sts, convs, k.astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16))
+
+        h, (sts, convs, ks, vs) = _scan(period_body, h, params["mamba"],
+                                        unroll=unroll)
+        return h, {"ssm": sts.astype(jnp.float32),
+                   "conv": convs.astype(jnp.bfloat16),
+                   "k": ks, "v": vs}
+
+
+# -------------------------------------------------------------- decode
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig,
+                    unroll: bool = False):
+    """Returns fn(params, DecodeState, batch) -> (logits, DecodeState).
+
+    One new token per sequence against a cache of ``shape.seq_len``.
+    """
+
+    def serve_step(params, state: DecodeState, batch):
+        tokens = batch["tokens"]            # (B, 1)
+        active = batch.get("active")
+        if active is None:
+            active = jnp.ones((tokens.shape[0],), jnp.int32)
+        act = active.astype(jnp.bool_)
+        h = T.embed_tokens(params, tokens, cfg)
+        cache, clen = state.cache, state.cache_len
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(carry, xs):
+                x = carry
+                lp, ck, cv = xs
+                x, (ck, cv) = L.decode_attention(
+                    lp["attn"], x, cfg, cache_k=ck, cache_v=cv,
+                    cache_len=clen, active=act)
+                if cfg.family == "moe":
+                    from repro.models import moe as moe_lib
+                    x, _ = moe_lib.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = L.swiglu_block(lp["mlp"], x, cfg)
+                return x, (ck, cv)
+            h, (ks, vs) = _scan(
+                body, h, (params["layers"], cache["k"], cache["v"]),
+                unroll=unroll)
+            new_cache = {"k": ks, "v": vs}
+        elif cfg.family == "enc_dec":
+            dt = jnp.dtype(cfg.compute_dtype)
+            def body(carry, xs):
+                x = carry
+                lp, ck, cv, xk, xv = xs
+                x, (ck, cv) = L.decode_attention(
+                    lp["self_attn"], x, cfg, cache_k=ck, cache_v=cv,
+                    cache_len=clen, active=act)
+                ca = lp["cross_attn"]
+                hn = L.rms_norm(x, ca["norm"], cfg.norm_eps).astype(dt)
+                q = jnp.einsum("bsd,dhk->bshk", hn, ca["wq"].astype(dt))
+                att = L.full_attention(q, xk.astype(dt), xv.astype(dt),
+                                       causal=False)
+                x = x + jnp.einsum("bshk,hkd->bsd", att,
+                                   ca["wo"].astype(dt))
+                x = L.swiglu_block(lp["mlp"], x, cfg)
+                return x, (ck, cv)
+            h, (ks, vs) = _scan(
+                body, h, (params["dec_layers"], cache["k"], cache["v"],
+                          cache["xk"], cache["xv"]), unroll=unroll)
+            new_cache = dict(cache, k=ks, v=vs)
+        elif cfg.family == "ssm":
+            def body(carry, xs):
+                x = carry
+                lp, st, cs = xs
+                x, (st, cs) = ssm_lib.mamba2_block(
+                    lp, x, cfg, ssm_state=st, conv_state=cs, active=act)
+                return x, (st, cs)
+            h, (ssm, conv) = _scan(
+                body, h, (params["layers"], cache["ssm"], cache["conv"]),
+                unroll=unroll)
+            new_cache = {"ssm": ssm, "conv": conv}
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+            def period_body(carry, xs):
+                x = carry
+                pp, st, cs, ck, cv = xs
+                def inner(c, ys):
+                    lp, s1, c1 = ys
+                    c, (s1, c1) = ssm_lib.mamba2_block(
+                        lp, c, cfg, ssm_state=s1, conv_state=c1, active=act)
+                    return c, (s1, c1)
+                x, (st, cs) = _scan(inner, x, (pp, st, cs), unroll=unroll)
+                x, (ck, cv) = L.decode_attention(
+                    shared["attn"], x, cfg, cache_k=ck, cache_v=cv,
+                    cache_len=clen, active=act)
+                x = L.swiglu_block(shared["mlp"], x, cfg)
+                return x, (st, cs, ck, cv)
+            h, (ssm, conv, ks, vs) = _scan(
+                period_body, h,
+                (params["mamba"], cache["ssm"], cache["conv"],
+                 cache["k"], cache["v"]), unroll=unroll)
+            new_cache = {"ssm": ssm, "conv": conv, "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        logits = T.lm_logits(params, h, cfg)
+        return logits, DecodeState(new_cache, clen + active)
+
+    return serve_step

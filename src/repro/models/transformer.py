@@ -1,0 +1,262 @@
+"""Decoder-only LM (dense / vlm / moe / hybrid hosts) and encoder-decoder.
+
+Layers are stacked on a leading 'layers' dim and executed with
+``jax.lax.scan`` (compile-time / HLO-size control at 26B+ scale).  For
+roofline cost accounting an ``unroll`` flag replaces the scan with a Python
+loop (see DESIGN.md §6: XLA cost_analysis counts a while body once).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import mamba2 as ssm_lib
+from repro.models.schema import Spec
+
+
+# ============================================================== schemas
+def attn_schema(cfg: ModelConfig, stacked: Optional[int], prefix="layers"):
+    st = (stacked,) if stacked is not None else ()
+    sa = (prefix,) if stacked is not None else ()
+    H, KV, D, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "norm": Spec(st + (d,), sa + (None,), "ones"),
+        "wq": Spec(st + (d, H, D), sa + ("embed", "heads", "head_dim")),
+        "wk": Spec(st + (d, KV, D), sa + ("embed", "kv_heads", "head_dim")),
+        "wv": Spec(st + (d, KV, D), sa + ("embed", "kv_heads", "head_dim")),
+        "wo": Spec(st + (H, D, d), sa + ("heads", "head_dim", "embed")),
+    }
+
+
+def mlp_schema(cfg: ModelConfig, stacked: Optional[int], prefix="layers"):
+    st = (stacked,) if stacked is not None else ()
+    sa = (prefix,) if stacked is not None else ()
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": Spec(st + (d,), sa + (None,), "ones"),
+        "w_gate": Spec(st + (d, f), sa + ("embed", "ff")),
+        "w_up": Spec(st + (d, f), sa + ("embed", "ff")),
+        "w_down": Spec(st + (f, d), sa + ("ff", "embed")),
+    }
+
+
+def decoder_lm_schema(cfg: ModelConfig):
+    """dense / vlm / moe decoder-only LM."""
+    Lc = cfg.num_layers
+    sch = {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_tp"),
+                      "embed"),
+        "final_norm": Spec((cfg.d_model,), (None,), "ones"),
+        "layers": {"attn": attn_schema(cfg, Lc)},
+    }
+    if cfg.family == "moe":
+        sch["layers"]["moe"] = moe_lib.moe_schema(cfg, Lc)
+    else:
+        sch["layers"]["mlp"] = mlp_schema(cfg, Lc)
+    if not cfg.tie_embeddings:
+        sch["lm_head"] = Spec((cfg.d_model, cfg.padded_vocab),
+                              ("embed", "vocab"))
+    return sch
+
+
+def enc_dec_schema(cfg: ModelConfig):
+    return {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_tp"),
+                      "embed"),
+        "enc_layers": {
+            "attn": attn_schema(cfg, cfg.enc_layers),
+            "mlp": mlp_schema(cfg, cfg.enc_layers),
+        },
+        "enc_norm": Spec((cfg.d_model,), (None,), "ones"),
+        "dec_layers": {
+            "self_attn": attn_schema(cfg, cfg.dec_layers),
+            "cross_attn": attn_schema(cfg, cfg.dec_layers),
+            "mlp": mlp_schema(cfg, cfg.dec_layers),
+        },
+        "final_norm": Spec((cfg.d_model,), (None,), "ones"),
+        "lm_head": Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def hybrid_schema(cfg: ModelConfig):
+    """zamba2: periods of (attn_every mamba layers + 1 shared attn block)."""
+    assert cfg.num_layers % cfg.attn_every == 0
+    periods = cfg.num_layers // cfg.attn_every
+    m = ssm_lib.mamba2_schema(cfg, stacked=(periods, cfg.attn_every),
+                              prefix=("periods", "stack"))
+    shared = {"attn": attn_schema(cfg, None), "mlp": mlp_schema(cfg, None)}
+    return {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_tp"),
+                      "embed"),
+        "final_norm": Spec((cfg.d_model,), (None,), "ones"),
+        "mamba": m,
+        "shared": shared,
+    }
+
+
+def ssm_lm_schema(cfg: ModelConfig):
+    return {
+        "embed": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed_tp"),
+                      "embed"),
+        "final_norm": Spec((cfg.d_model,), (None,), "ones"),
+        "layers": ssm_lib.mamba2_schema(cfg, stacked=(cfg.num_layers,),
+                                        prefix=("layers",)),
+    }
+
+
+def model_schema(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return decoder_lm_schema(cfg)
+    if cfg.family == "enc_dec":
+        return enc_dec_schema(cfg)
+    if cfg.family == "hybrid":
+        return hybrid_schema(cfg)
+    if cfg.family == "ssm":
+        return ssm_lm_schema(cfg)
+    raise ValueError(cfg.family)
+
+
+# ============================================================== embedding / logits
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = params["embed"].astype(dt)[tokens]
+    return constrain(out, "batch", None, "embed")
+
+
+def lm_logits(params, h, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps).astype(dt)
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(dt))
+    logits = constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padded slots
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    return logits
+
+
+# ============================================================== decoder stacks
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _scan_layers(body, h, stacked_params, cfg: ModelConfig, unroll: bool,
+                 length: int):
+    body = _maybe_remat(body, cfg)
+    if unroll:
+        for i in range(length):
+            h, _ = body(h, jax.tree.map(lambda x: x[i], stacked_params))
+        return h
+    h, _ = jax.lax.scan(body, h, stacked_params)
+    return h
+
+
+def decoder_forward(params, tokens, cfg: ModelConfig, *,
+                    patch_embeds=None, unroll=False):
+    """Returns final hidden states (B, S, d)."""
+    h = embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "vision":
+        assert patch_embeds is not None
+        pe = constrain(patch_embeds.astype(h.dtype), "batch", None, "embed")
+        h = jnp.concatenate([pe, h], axis=1)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            x, aux_acc = carry
+            x, _ = L.attention_block(lp["attn"], x, cfg, causal=True)
+            if cfg.family == "moe":
+                x, aux = moe_lib.moe_block(lp["moe"], x, cfg)
+                aux_acc = aux_acc + aux
+            else:
+                x = L.swiglu_block(lp["mlp"], x, cfg)
+            return (x, aux_acc), ()
+        body = _maybe_remat(body, cfg)
+        if unroll:
+            carry = (h, aux_total)
+            for i in range(cfg.num_layers):
+                carry, _ = body(carry,
+                                jax.tree.map(lambda x: x[i], params["layers"]))
+            h, aux_total = carry
+        else:
+            (h, aux_total), _ = jax.lax.scan(body, (h, aux_total),
+                                             params["layers"])
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            x = carry
+            x, _ = ssm_lib.mamba2_block(lp, x, cfg)
+            return x, ()
+        h = _scan_layers(body, h, params["layers"], cfg, unroll,
+                         cfg.num_layers)
+        aux_total = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        periods = cfg.num_layers // cfg.attn_every
+        shared = params["shared"]
+
+        def period_body(carry, pp):
+            x = carry
+            def inner(c, lp):
+                c, _ = ssm_lib.mamba2_block(lp, c, cfg)
+                return c, ()
+            x, _ = jax.lax.scan(inner, x, pp)
+            x, _ = L.attention_block(shared["attn"], x, cfg, causal=True)
+            x = L.swiglu_block(shared["mlp"], x, cfg)
+            return x, ()
+        pb = _maybe_remat(period_body, cfg)
+        if unroll:
+            for i in range(periods):
+                h, _ = pb(h, jax.tree.map(lambda x: x[i], params["mamba"]))
+        else:
+            h, _ = jax.lax.scan(pb, h, params["mamba"])
+    else:
+        raise ValueError(cfg.family)
+    return h, aux_total
+
+
+def encoder_forward(params, frames, cfg: ModelConfig, unroll=False):
+    h = constrain(frames.astype(jnp.dtype(cfg.compute_dtype)),
+                  "batch", None, "embed")
+
+    def body(carry, lp):
+        x = carry
+        x, _ = L.attention_block(lp["attn"], x, cfg, causal=False)
+        x = L.swiglu_block(lp["mlp"], x, cfg)
+        return x, ()
+    h = _scan_layers(body, h, params["enc_layers"], cfg, unroll,
+                     cfg.enc_layers)
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def enc_dec_forward(params, frames, tokens, cfg: ModelConfig, unroll=False):
+    enc_out = encoder_forward(params, frames, cfg, unroll=unroll)
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = embed_tokens(params, tokens, cfg)
+
+    def body(carry, lp):
+        x = carry
+        x, _ = L.attention_block(lp["self_attn"], x, cfg, causal=True)
+        # cross attention: k/v from encoder output
+        ca = lp["cross_attn"]
+        hn = L.rms_norm(x, ca["norm"], cfg.norm_eps).astype(dt)
+        q = jnp.einsum("bsd,dhk->bshk", hn, ca["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt),
+                       ca["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt),
+                       ca["wv"].astype(dt))
+        att = L.full_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", att, ca["wo"].astype(dt))
+        x = L.swiglu_block(lp["mlp"], x, cfg)
+        return x, ()
+    h = _scan_layers(body, h, params["dec_layers"], cfg, unroll,
+                     cfg.dec_layers)
+    return h

@@ -1,0 +1,85 @@
+"""AdamW with cosine schedule, warmup and global-norm clipping.
+
+Plain pytree implementation (no optax dependency).  Optimizer state is fp32
+and shards like the params; with ``zero1`` the launcher additionally shards
+the first dim of m/v over the data axis (see launch/shardings_for_state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HParams(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def init(params) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def abstract_init(params) -> AdamWState:
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def schedule(step, hp: HParams) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = hp.lr * step / max(hp.warmup_steps, 1)
+    frac = jnp.clip((step - hp.warmup_steps)
+                    / max(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * hp.lr * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < hp.warmup_steps, warm, cos)
+
+
+def update(params, grads, state: AdamWState, step, hp: HParams):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, hp)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - hp.b1 ** t
+    bc2 = 1.0 - hp.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = hp.b1 * m + (1 - hp.b1) * g
+        v = hp.b2 * v + (1 - hp.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + hp.eps) + hp.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(new_m, new_v)

@@ -1,0 +1,102 @@
+"""Property tests (hypothesis) for the load-balancing strategies."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import loadbalance as lb
+from repro.core.rates import RateMonitor
+
+loads_st = st.lists(st.floats(0.1, 10.0), min_size=4, max_size=64)
+npes_st = st.integers(2, 8)
+
+
+@given(loads=loads_st, n_pes=npes_st, seed=st.integers(0, 100))
+@settings(max_examples=60, deadline=None)
+def test_greedy_assigns_all_with_lpt_bound(loads, n_pes, seed):
+    rng = np.random.default_rng(seed)
+    current = rng.integers(0, n_pes, len(loads))
+    res = lb.greedy(loads, n_pes, current=current)
+    assert res.assignment.shape == (len(loads),)
+    assert res.assignment.min() >= 0 and res.assignment.max() < n_pes
+    # LPT guarantee: makespan <= (4/3 - 1/3m) OPT; OPT >= max(mean, max load)
+    opt_lb = max(sum(loads) / n_pes, max(loads))
+    assert res.makespan <= (4 / 3) * opt_lb + 1e-9
+
+
+@given(loads=loads_st, n_pes=npes_st, seed=st.integers(0, 100))
+@settings(max_examples=60, deadline=None)
+def test_greedy_refine_never_worse_and_migrations_bounded(loads, n_pes, seed):
+    rng = np.random.default_rng(seed)
+    current = rng.integers(0, n_pes, len(loads))
+    refine = lb.greedy_refine(loads, n_pes, current=current)
+    assert refine.makespan <= refine.baseline_makespan + 1e-9
+    # migrations are bounded by the object count (and only donors donate)
+    per_pe = np.bincount(current, minlength=n_pes)
+    assert refine.migrations <= len(loads)
+    # objects only ever leave overloaded PEs
+    moved = np.nonzero(refine.assignment != current)[0]
+    if len(moved):
+        scaled = np.zeros(n_pes)
+        np.add.at(scaled, current, np.asarray(loads))
+        ideal = np.sum(loads) / n_pes
+        assert all(scaled[current[o]] > ideal for o in moved)
+
+
+@given(loads=loads_st, n_pes=npes_st,
+       rates=st.lists(st.floats(0.2, 2.0), min_size=8, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_rate_aware_greedy_bounds(loads, n_pes, rates):
+    rates = rates[:n_pes] + [1.0] * max(0, n_pes - len(rates))
+    res = lb.greedy(loads, n_pes, rates=rates)
+    # makespan >= ideal lower bound sum(l)/sum(r), <= serial on fastest PE
+    ideal = sum(loads) / sum(rates)
+    assert res.makespan >= ideal - 1e-9
+    assert res.makespan <= sum(loads) / min(rates) + 1e-9
+
+
+def test_rate_aware_moves_work_off_slow_pe():
+    loads = np.ones(16)
+    rates = [1.0, 1.0, 0.25, 1.0]
+    res = lb.greedy(loads, 4, rates=rates)
+    counts = np.bincount(res.assignment, minlength=4)
+    assert counts[2] == counts.min()
+    assert counts[2] <= 2  # slow PE gets far fewer than 4
+    blind = lb.greedy(loads, 4)
+    assert res.makespan < lb._makespan(blind.assignment, loads,
+                                       np.asarray(rates))
+
+
+def test_greedy_refine_keeps_balanced_assignment():
+    """On a homogeneous, already-balanced system: zero migrations."""
+    loads = np.ones(16)
+    current = np.arange(16) % 4
+    res = lb.greedy_refine(loads, 4, current=current)
+    assert res.migrations == 0
+    assert np.array_equal(res.assignment, current)
+
+
+def test_no_lb_is_identity():
+    loads = np.ones(8)
+    cur = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    res = lb.no_lb(loads, 2, current=cur)
+    assert np.array_equal(res.assignment, cur)
+    assert res.migrations == 0
+
+
+# ------------------------------------------------------------ rate monitor
+def test_rate_monitor_ewma_and_stragglers():
+    mon = RateMonitor(4, alpha=0.5)
+    for _ in range(10):
+        mon.record_step([4, 4, 4, 4], [1.0, 1.0, 2.5, 1.0])
+    r = mon.rates()
+    assert r[2] < 0.6 * r[0]
+    assert mon.straggler_pes(0.7) == [2]
+
+
+def test_rate_monitor_resize_preserves_history():
+    mon = RateMonitor(4)
+    mon.record_step([1, 1, 1, 1], [1.0, 1.0, 4.0, 1.0])
+    mon.resize(6)
+    assert mon.rates().shape == (6,)
+    assert mon.rates()[2] < mon.rates()[0]

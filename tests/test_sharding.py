@@ -1,0 +1,77 @@
+"""Sharding-rule unit tests: divisibility fallbacks, axis dedup, ZeRO-1."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.mesh import make_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch.specs import (_zero1_extend, batch_shardings,
+                                params_shardings, state_shardings)
+from repro.models import transformer as T
+from repro.models.schema import Spec, is_spec
+
+
+@pytest.fixture(scope="module")
+def rules():
+    # CPU-scale stand-in mesh with the production axis names
+    return ShardingRules(make_mesh((1, 1), ("data", "model")))
+
+
+def test_spec_dedup_never_reuses_axis(rules):
+    # both dims prefer 'model'; only the first may take it
+    spec = rules.spec(("experts", "expert_ff"), (16, 32))
+    flat = [a for part in spec for a in
+            ((part,) if isinstance(part, str) else (part or ()))]
+    assert len(flat) == len(set(flat))
+
+
+def test_divisibility_fallback():
+    rules4 = ShardingRules(make_mesh((1, 1), ("data", "model")))
+    # dim not divisible by axis size 1 never happens; emulate with logic:
+    assert rules4.mesh_axes_for("heads", 24) in ("model", None)
+    # non-divisible -> None (llama 24 heads on a 16-way axis)
+    class FakeMesh:
+        shape = {"data": 1, "model": 16}
+        axis_names = ("data", "model")
+    fr = ShardingRules.__new__(ShardingRules)
+    fr.mesh = FakeMesh()
+    fr.axes = {"data", "model"}
+    assert fr.mesh_axes_for("heads", 24) is None
+    assert fr.mesh_axes_for("heads", 32) == "model"
+    assert fr.mesh_axes_for("experts", 60) is None
+    assert fr.mesh_axes_for("experts", 128) == "model"
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_params_shardings_cover_schema(name, rules):
+    sch = T.model_schema(ARCHS[name])
+    psh = params_shardings(ARCHS[name], rules)
+    specs = jax.tree.leaves(sch, is_leaf=is_spec)
+    shardings = jax.tree.leaves(psh)
+    assert len(specs) == len(shardings)
+    for s, sh in zip(specs, shardings):
+        assert len(sh.spec) <= len(s.shape)
+
+
+def test_padded_vocab_always_divides_production_axis():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % 16 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_zero1_extends_first_free_dim():
+    from jax.sharding import NamedSharding
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(mesh)
+    sh = NamedSharding(mesh, P(None, "model"))
+    out = _zero1_extend(sh, (8, 16), rules)
+    assert out.spec[0] == "data"
+
+
+def test_batch_shardings_match_batch_spec(rules):
+    from repro.configs import SHAPES
+    cfg = ARCHS["internvl2-26b"]
+    bsh = batch_shardings(cfg, SHAPES["train_4k"], rules)
+    assert set(bsh) == {"tokens", "labels", "patch_embeds"}
