@@ -1,7 +1,7 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (one per measured point).
-Sections:
+Sections (run all, or pick with positional names / ``--scenario``):
   fig2_overdecomp     weak-scaling analogue: time/iter vs ODF (+latency)
   fig3_loadbalance    heterogeneous fleet: no-LB vs GreedyRefine (rate-aware)
   fig5_interrupt_cpu  rescale stage breakdown, host-memory store
@@ -10,11 +10,13 @@ Sections:
   fig8_endtoend       total runtime vs #simultaneous interruptions
   kernels             per-kernel throughput (ref path) + allclose check
   roofline            summary over artifacts/dryrun (§Roofline)
+  cluster_hetero      serving cluster: rate-aware vs round-robin routing on
+                      a 2-fast/2-slow fleet + a drained spot interruption
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 import numpy as np
@@ -173,6 +175,63 @@ def kernels():
     row("kernel_ssd_ref_1k", us, f"chunk={l}")
 
 
+# ------------------------------------------------------------------ cluster
+def cluster_hetero():
+    """Serving-cluster A/B (paper §III/§IV on the serving workload).
+
+    A 2-fast/2-slow replica fleet serves the same request batch under
+    round-robin and rate-aware routing; one fast replica receives a spot
+    interruption mid-run and is drained (slots checkpointed + migrated).
+    Rate-aware routing must win on p99 latency AND aggregate tokens/sec,
+    and the drain must drop zero requests.
+    """
+    import jax
+    from repro.cluster import (InstanceType, ROUTERS, ServingCluster)
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.serving.workload import synthetic_requests
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    fleet = [InstanceType("fast.2x", 2.0), InstanceType("fast.2x", 2.0),
+             InstanceType("slow.1x", 0.7), InstanceType("slow.1x", 0.7)]
+
+    results = {}
+    for name, router_cls in ROUTERS.items():
+        cl = ServingCluster(cfg, params, fleet, router=router_cls(),
+                            dt=1.0, batch_size=2, max_seq=48,
+                            rebalance_lead=6.0, notice_deadline=4.0)
+        reqs = synthetic_requests(24, cfg.vocab_size, seed=0,
+                                  prompt_len=(3, 9), max_new=(4, 12))
+        for r in reqs:
+            cl.submit(r, at=0.0)
+        cl.inject_interruption(t=4.0, replica_rid=0)
+        out = cl.run(max_time=10_000)
+        results[name] = out
+        lost = sum(r.max_new_tokens - len(r.out_tokens) for r in reqs)
+        row(f"cluster_hetero_{name}_p50", out["p50_latency"] * 1e6,
+            f"virtual_s={out['p50_latency']:.1f}")
+        row(f"cluster_hetero_{name}_p99", out["p99_latency"] * 1e6,
+            f"virtual_s={out['p99_latency']:.1f}")
+        row(f"cluster_hetero_{name}_throughput", 0.0,
+            f"tok_per_s={out['tok_per_s']:.2f};"
+            f"makespan_s={out['virtual_seconds']:.0f}")
+        row(f"cluster_hetero_{name}_drain", out["interruption_overhead_s"]
+            * 1e6,
+            f"dropped={out['dropped']};migrated={out['migrated_slots']};"
+            f"tokens_lost={lost}")
+        assert out["dropped"] == 0 and lost == 0, \
+            f"{name}: drain dropped work"
+    ra, rr = results["rate_aware"], results["round_robin"]
+    wins = (ra["p99_latency"] < rr["p99_latency"]
+            and ra["tok_per_s"] > rr["tok_per_s"])
+    row("cluster_hetero_summary", 0.0,
+        f"rate_aware_beats_round_robin={wins};"
+        f"p99={ra['p99_latency']:.1f}vs{rr['p99_latency']:.1f};"
+        f"tok_per_s={ra['tok_per_s']:.2f}vs{rr['tok_per_s']:.2f}")
+    assert wins, "rate-aware routing did not beat round-robin"
+
+
 # ------------------------------------------------------------------ roofline
 def roofline():
     from repro.launch.roofline import load_table
@@ -192,11 +251,22 @@ def roofline():
 
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
-            roofline]
+            cluster_hetero, roofline]
 
 
 def main() -> None:
-    names = sys.argv[1:]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("sections", nargs="*",
+                    help="section names to run (default: all)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="alias for a positional section name")
+    args = ap.parse_args()
+    names = list(args.sections) + list(args.scenario)
+    known = {fn.__name__ for fn in SECTIONS}
+    unknown = set(names) - known
+    if unknown:
+        ap.error(f"unknown section(s): {sorted(unknown)}; "
+                 f"choose from {sorted(known)}")
     print("name,us_per_call,derived")
     for fn in SECTIONS:
         if names and fn.__name__ not in names:

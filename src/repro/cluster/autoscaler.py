@@ -1,0 +1,123 @@
+"""Elastic autoscaling + proactive spot-drain for the serving cluster.
+
+Subscribes to two signal sources:
+
+* ``SpotEventFeed`` (core.cloud) — the §IV spot lifecycle.  On a
+  *rebalance recommendation* the autoscaler pre-warms a replacement
+  replica (the paper's Mode C: replacements are requested at the
+  recommendation, long before the 2-minute notice).  On the
+  *interruption notice* it drains the doomed replica: every in-flight
+  slot is checkpointed (via ``InMemoryStore``) and re-admitted onto the
+  healthiest surviving replicas; queued requests go back to the router.
+  Zero requests are dropped and no decoded token is recomputed.
+* Load — backlog-per-replica thresholds grow and shrink the fleet
+  (the elastic-job-scheduler behaviour of Bhosale & Kale, applied to
+  serving): sustained backlog launches a replica; a sustained-idle
+  surplus replica is drained (losslessly) and retired.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.cloud import SpotNotice
+
+from repro.cluster.metrics import DrainRecord
+from repro.cluster.replica import InstanceType, Replica, ReplicaState
+
+
+class Autoscaler:
+    def __init__(self, cluster, *, replacement_latency: float = 90.0,
+                 scale_up_backlog: float = 128.0,
+                 scale_up_patience: float = 30.0,
+                 scale_down_idle: float = 120.0,
+                 min_replicas: int = 1,
+                 max_replicas: int = 8,
+                 default_itype: Optional[InstanceType] = None):
+        self.cluster = cluster
+        self.replacement_latency = replacement_latency
+        self.scale_up_backlog = scale_up_backlog
+        self.scale_up_patience = scale_up_patience
+        self.scale_down_idle = scale_down_idle
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.default_itype = default_itype
+        self._over_since: Optional[float] = None
+        self._idle_since: Optional[float] = None
+
+    # ------------------------------------------------------------- events
+    def handle_spot(self, ev: SpotNotice, now: float):
+        rep = self.cluster.replica_by_rid(ev.target)
+        if rep is None or rep.state == ReplicaState.TERMINATED:
+            return
+        if ev.kind == "rebalance_recommendation":
+            if rep.serving:
+                rep.state = ReplicaState.AT_RISK
+                # Mode C: request the replacement NOW, rescale later
+                new = self.cluster.launch(
+                    rep.itype, ready_at=now + self.replacement_latency)
+                self.cluster.log(now, f"rebalance_recommendation r{rep.rid} "
+                                      f"prewarm r{new.rid}")
+        elif ev.kind == "interruption_notice":
+            self.cluster.log(now, f"interruption_notice r{rep.rid}")
+            self.drain(rep, now)
+        elif ev.kind == "terminate":
+            rep.terminate()
+            self.cluster.log(now, f"terminated r{rep.rid}")
+
+    def drain(self, rep: Replica, now: float):
+        """Checkpoint the doomed replica's slots; re-admit them elsewhere."""
+        snaps, queued, (ckpt_s, restore_s) = rep.drain()
+        metrics = self.cluster.metrics
+        metrics.drains.append(DrainRecord(
+            t=now, replica=rep.rid, slots_migrated=len(snaps),
+            queued_requeued=len(queued), checkpoint_s=ckpt_s,
+            restore_s=restore_s))
+        for s in snaps:
+            metrics.on_migration(s.request.rid)
+        if queued:
+            self.cluster.router.requeue(queued)
+        # least-loaded-first (rate-scaled) re-admission; parked if nobody
+        # is serving yet (re-admitted once a replacement comes up)
+        self.cluster.readmit(snaps, now)
+
+    # ------------------------------------------------------------- load
+    def tick(self, now: float):
+        cl = self.cluster
+        serving = [r for r in cl.replicas if r.serving]
+        launching = [r for r in cl.replicas
+                     if r.state == ReplicaState.LAUNCHING]
+        if not serving:
+            return
+        backlog = sum(r.backlog_tokens() for r in serving) \
+            + sum(q.total_tokens for q in cl.router.queue)
+        per_replica = backlog / max(len(serving) + len(launching), 1)
+
+        # scale up on sustained backlog
+        if per_replica > self.scale_up_backlog:
+            if self._over_since is None:
+                self._over_since = now
+            elif (now - self._over_since >= self.scale_up_patience
+                    and len(serving) + len(launching) < self.max_replicas):
+                itype = self.default_itype or serving[0].itype
+                new = cl.launch(itype,
+                                ready_at=now + self.replacement_latency)
+                cl.log(now, f"scale_up r{new.rid} ({itype.name}) "
+                            f"backlog/replica={per_replica:.0f}")
+                self._over_since = None
+        else:
+            self._over_since = None
+
+        # scale down a surplus replica after a sustained idle window
+        if backlog == 0 and not launching and len(serving) > self.min_replicas:
+            if self._idle_since is None:
+                self._idle_since = now
+            elif now - self._idle_since >= self.scale_down_idle:
+                victim = min(serving,
+                             key=lambda r: cl.rates().get(r.rid, 1.0))
+                self.drain(victim, now)
+                victim.terminate()
+                cl.log(now, f"scale_down r{victim.rid}")
+                self._idle_since = None
+        else:
+            self._idle_since = None

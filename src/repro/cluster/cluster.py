@@ -1,0 +1,180 @@
+"""ServingCluster: the message-driven loop binding the pieces together.
+
+The serving analogue of the paper's adaptive runtime: ``ServingEngine``
+replicas are PEs, in-flight requests are migratable chares, the router is
+the rate-aware load balancer, and the autoscaler is the CloudManager
+policy layer (pre-warm on rebalance recommendation, drain on the
+2-minute notice, elastic grow/shrink on load).
+
+The loop runs on a deterministic ``VirtualClock``: each tick delivers due
+request arrivals and spot events, lets the autoscaler react, dispatches
+the router, then advances every replica by ``dt`` virtual seconds (a
+replica with speed ``s`` runs ``s * dt`` real jitted decode steps).  All
+policy decisions consume *measured* rates from the shared
+``RateMonitor`` — never the InstanceType ground truth.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.checkpointing import InMemoryStore
+from repro.core.cloud import SpotEventFeed
+from repro.core.rates import RateMonitor
+from repro.serving.engine import Request, SlotSnapshot
+
+from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.metrics import ClusterMetrics, VirtualClock
+from repro.cluster.replica import InstanceType, Replica
+from repro.cluster.router import RateAwareRouter, Router
+
+
+class ServingCluster:
+    def __init__(self, cfg: ModelConfig, params,
+                 fleet: Sequence[InstanceType], *,
+                 router: Optional[Router] = None,
+                 batch_size: int = 2, max_seq: int = 64,
+                 temperature: float = 0.0,
+                 dt: float = 1.0, seed: int = 0,
+                 rebalance_lead: float = 180.0,
+                 notice_deadline: float = 120.0,
+                 autoscaler_kw: Optional[dict] = None):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.dt = dt
+        self.seed = seed
+        self.clock = VirtualClock()
+        self.store = InMemoryStore()
+        self.monitor = RateMonitor(len(fleet))
+        self.router = router if router is not None else RateAwareRouter()
+        self.spot = SpotEventFeed(rebalance_lead=rebalance_lead,
+                                  notice_deadline=notice_deadline)
+        self.metrics = ClusterMetrics()
+        self.autoscaler = Autoscaler(self, **(autoscaler_kw or {}))
+        self.timeline: List[Tuple[float, str]] = []
+        self._rid = itertools.count()
+        self.replicas: List[Replica] = []
+        for itype in fleet:
+            self.launch(itype, ready_at=0.0)
+        self._arrivals: List[Tuple[float, int, Request]] = []
+        self._arr_seq = itertools.count()
+        self._parked: List[SlotSnapshot] = []
+
+    # ------------------------------------------------------------- fleet
+    def launch(self, itype: InstanceType, *, ready_at: float) -> Replica:
+        rid = next(self._rid)
+        if rid >= self.monitor.n_pes:
+            self.monitor.resize(rid + 1)
+        rep = Replica(rid, self.cfg, self.params, itype,
+                      batch_size=self.batch_size, max_seq=self.max_seq,
+                      temperature=self.temperature,
+                      monitor=self.monitor, store=self.store,
+                      ready_at=ready_at, seed=self.seed)
+        self.replicas.append(rep)
+        self.metrics.ensure_replica(rid, itype.name)
+        return rep
+
+    def replica_by_rid(self, rid: int) -> Optional[Replica]:
+        for r in self.replicas:
+            if r.rid == rid:
+                return r
+        return None
+
+    def rates(self) -> Dict[int, float]:
+        """Measured, normalized rates keyed by replica id."""
+        r = self.monitor.rates()
+        return {rep.rid: float(r[rep.rid]) for rep in self.replicas
+                if rep.rid < len(r)}
+
+    def readmit(self, snaps: List[SlotSnapshot], now: float) -> bool:
+        """Place checkpointed slots on the least-loaded admitting replicas.
+
+        Returns False (and parks the snapshots) when nobody can take them;
+        they are re-admitted as soon as a replica is serving again.
+        """
+        if not snaps:
+            return True
+        survivors = [r for r in self.replicas if r.admitting]
+        if not survivors:
+            self._parked.extend(snaps)
+            return False
+        rates = self.rates()
+
+        def key(r):
+            return r.engine.backlog_tokens() / max(rates.get(r.rid, 1.0),
+                                                   1e-9)
+        for s in snaps:
+            tgt = min(survivors, key=key)
+            tgt.restore([s])
+            self.log(now, f"readmit req{s.request.rid} -> r{tgt.rid}")
+        return True
+
+    def log(self, t: float, msg: str):
+        self.timeline.append((t, msg))
+
+    # ------------------------------------------------------------- input
+    def submit(self, req: Request, at: float = 0.0):
+        heapq.heappush(self._arrivals, (at, next(self._arr_seq), req))
+
+    def inject_interruption(self, t: float, replica_rid: int):
+        self.spot.inject_interruption(t, replica_rid)
+
+    # ------------------------------------------------------------- loop
+    def _pending_work(self) -> bool:
+        return (bool(self._arrivals) or bool(self.router.queue)
+                or bool(self._parked)
+                or any(r.serving and r.has_work() for r in self.replicas))
+
+    def _unpark(self, now: float):
+        if not self._parked:
+            return
+        parked, self._parked = self._parked, []
+        self.readmit(parked, now)
+
+    def tick(self):
+        """One cluster step: events -> autoscaler -> router -> replicas."""
+        now = self.clock.now()
+        while self._arrivals and self._arrivals[0][0] <= now:
+            _, _, req = heapq.heappop(self._arrivals)
+            self.router.submit(req)
+            self.metrics.on_submit(req.rid, now)
+        for ev in self.spot.poll(now):
+            self.autoscaler.handle_spot(ev, now)
+        self.autoscaler.tick(now)
+        self._unpark(now)
+        self.router.dispatch(self.replicas, self.rates())
+        for rep in self.replicas:
+            busy = rep.serving and rep.has_work()
+            emitted = rep.advance(self.dt, now)
+            if emitted or busy:
+                self.metrics.on_tokens(rep.rid, emitted,
+                                       self.dt if busy else 0.0)
+            for req in rep.completed:
+                self.metrics.on_done(req.rid, now + self.dt,
+                                     len(req.out_tokens))
+            rep.completed = []
+        self.clock.advance(self.dt)
+
+    def run(self, *, max_time: float = 100_000.0) -> Dict[str, float]:
+        """Drive until idle (no arrivals, queues, slots, or spot events)."""
+        while self.clock.now() < max_time:
+            if (not self._pending_work()
+                    and self.spot.next_event_t == float("inf")):
+                break
+            if (not self._pending_work()
+                    and self.spot.next_event_t > self.clock.now()):
+                # fast-forward idle time to the next spot event (bounded
+                # by max_time so a far-future event cannot stall run())
+                jump = min(self.spot.next_event_t, max_time) \
+                    - self.clock.now()
+                if jump > 0:
+                    self.clock.advance(jump)
+                continue
+            self.tick()
+        return self.metrics.summary(self.clock.now())

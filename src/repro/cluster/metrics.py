@@ -1,0 +1,119 @@
+"""Cluster observability: virtual clock, request traces, fleet summaries.
+
+Everything is keyed off *virtual* time so cluster runs are deterministic
+and reproducible on any host; only checkpoint/restore stage timings (from
+the ``InMemoryStore`` timers) are real wall-clock measurements.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class VirtualClock:
+    """Deterministic fake clock driving the cluster loop."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float):
+        assert dt > 0
+        self._t += dt
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    rid: int
+    arrival_t: float
+    done_t: Optional[float] = None
+    tokens: int = 0
+    migrations: int = 0          # times this request was drain-migrated
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.done_t is None else self.done_t - self.arrival_t
+
+
+@dataclasses.dataclass
+class ReplicaStats:
+    rid: int
+    itype: str
+    tokens: int = 0
+    busy_s: float = 0.0          # virtual seconds with work in the engine
+
+
+@dataclasses.dataclass
+class DrainRecord:
+    t: float
+    replica: int
+    slots_migrated: int
+    queued_requeued: int
+    checkpoint_s: float          # real (measured) store stage seconds
+    restore_s: float = 0.0
+
+
+class ClusterMetrics:
+    def __init__(self):
+        self.traces: Dict[int, RequestTrace] = {}
+        self.replicas: Dict[int, ReplicaStats] = {}
+        self.drains: List[DrainRecord] = []
+
+    # ------------------------------------------------------------ request
+    def on_submit(self, rid: int, now: float):
+        self.traces[rid] = RequestTrace(rid, now)
+
+    def on_done(self, rid: int, now: float, tokens: int):
+        tr = self.traces[rid]
+        tr.done_t = now
+        tr.tokens = tokens
+
+    def on_migration(self, rid: int):
+        if rid in self.traces:
+            self.traces[rid].migrations += 1
+
+    # ------------------------------------------------------------ replica
+    def ensure_replica(self, rid: int, itype: str):
+        if rid not in self.replicas:
+            self.replicas[rid] = ReplicaStats(rid, itype)
+
+    def on_tokens(self, rid: int, tokens: int, busy_s: float):
+        st = self.replicas[rid]
+        st.tokens += tokens
+        st.busy_s += busy_s
+
+    # ------------------------------------------------------------ summary
+    def latencies(self) -> np.ndarray:
+        return np.asarray([t.latency for t in self.traces.values()
+                           if t.latency is not None], dtype=np.float64)
+
+    def summary(self, now: float) -> Dict[str, float]:
+        lat = self.latencies()
+        total_tokens = sum(s.tokens for s in self.replicas.values())
+        done = int(sum(t.done_t is not None for t in self.traces.values()))
+        out = {
+            "virtual_seconds": now,
+            "submitted": len(self.traces),
+            "completed": done,
+            "dropped": len(self.traces) - done,
+            "total_tokens": total_tokens,
+            "tok_per_s": total_tokens / max(now, 1e-9),
+            "p50_latency": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "p99_latency": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            "max_latency": float(lat.max()) if lat.size else 0.0,
+            "migrated_slots": sum(d.slots_migrated for d in self.drains),
+            "drains": len(self.drains),
+            "interruption_overhead_s": sum(
+                d.checkpoint_s + d.restore_s for d in self.drains),
+        }
+        return out
+
+    def per_replica(self) -> List[Dict[str, float]]:
+        return [{"rid": s.rid, "itype": s.itype, "tokens": s.tokens,
+                 "tok_per_s": s.tokens / max(s.busy_s, 1e-9)}
+                for s in self.replicas.values()]

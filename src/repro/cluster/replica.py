@@ -1,0 +1,154 @@
+"""A serving replica: a ``ServingEngine`` treated as a PE.
+
+The cluster maps the paper's runtime objects onto serving (§III/§IV):
+replicas are PEs with *measured* heterogeneous rates; in-flight requests
+are migratable chares.  Each replica wraps an engine with
+
+* an ``InstanceType`` (the EC2-flavor analogue: relative speed, spot flag),
+* a feed into the shared ``RateMonitor`` — measured tokens/sec, never
+  ground-truth speed, so stragglers and jitter are handled identically,
+* checkpointable slot state: a drain checkpoints every in-flight slot
+  through an ``InMemoryStore`` (the §II-B shm substrate) and hands the
+  snapshots back for re-admission elsewhere.
+
+Virtual-time pacing: ``advance(dt)`` grants the replica ``dt * speed``
+engine-step credits, so a 2x instance runs twice as many decode steps per
+virtual second.  Decode itself is real (jitted serve_step); only the
+pacing is simulated, which keeps runs deterministic on any host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.checkpointing import InMemoryStore
+from repro.core.rates import RateMonitor
+from repro.serving.engine import Request, ServingEngine, SlotSnapshot
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceType:
+    name: str
+    speed: float                 # engine steps per virtual second
+    spot: bool = True
+
+
+class ReplicaState(enum.Enum):
+    LAUNCHING = "launching"      # requested; warming up until ready_at
+    RUNNING = "running"
+    AT_RISK = "at_risk"          # rebalance recommendation received
+    DRAINING = "draining"        # interruption notice: no new admissions
+    TERMINATED = "terminated"
+
+
+class Replica:
+    def __init__(self, rid: int, cfg: ModelConfig, params,
+                 itype: InstanceType, *, batch_size: int = 2,
+                 max_seq: int = 64, temperature: float = 0.0,
+                 monitor: Optional[RateMonitor] = None,
+                 store: Optional[InMemoryStore] = None,
+                 ready_at: float = 0.0, seed: int = 0):
+        self.rid = rid
+        self.itype = itype
+        self.engine = ServingEngine(cfg, params, batch_size=batch_size,
+                                    max_seq=max_seq,
+                                    temperature=temperature,
+                                    seed=seed + rid)
+        self.monitor = monitor
+        self.store = store or InMemoryStore()
+        self.ready_at = ready_at
+        self.state = ReplicaState.LAUNCHING if ready_at > 0 \
+            else ReplicaState.RUNNING
+        self._credit = 0.0
+        self.tokens_total = 0
+        self.completed: List[Request] = []
+
+    # ------------------------------------------------------------- status
+    @property
+    def serving(self) -> bool:
+        """Accepting and executing work (at-risk replicas still serve)."""
+        return self.state in (ReplicaState.RUNNING, ReplicaState.AT_RISK)
+
+    @property
+    def admitting(self) -> bool:
+        """Routable: serving and not scheduled for interruption."""
+        return self.state == ReplicaState.RUNNING
+
+    def has_work(self) -> bool:
+        return self.engine.n_active > 0 or self.engine.n_queued > 0
+
+    def backlog_tokens(self) -> float:
+        return self.engine.backlog_tokens() if self.serving else 0.0
+
+    # ------------------------------------------------------------- driving
+    def maybe_ready(self, now: float):
+        if self.state == ReplicaState.LAUNCHING and now >= self.ready_at:
+            self.state = ReplicaState.RUNNING
+
+    def advance(self, dt: float, now: float) -> int:
+        """Run up to ``dt * speed`` engine steps; returns tokens emitted."""
+        self.maybe_ready(now)
+        if not (self.serving or self.state == ReplicaState.DRAINING):
+            return 0
+        self._credit += dt * self.itype.speed
+        emitted = 0
+        steps = 0
+        processed0 = self.engine.processed_tokens
+        while self._credit >= 1.0 and self.has_work():
+            self._credit -= 1.0
+            emitted += self.engine.step()
+            steps += 1
+        if not self.has_work():
+            self._credit = min(self._credit, 1.0)  # no credit while idle
+        self.tokens_total += emitted
+        self.completed.extend(self.engine.pop_completed())
+        if self.monitor is not None and steps > 0:
+            # measured work-units/sec (prefill counts) over the virtual
+            # time actually spent stepping (steps / speed) — an idle or
+            # work-starved replica is not a slow replica, so unused tick
+            # time never dilutes the measurement
+            self.monitor.record(
+                self.rid, self.engine.processed_tokens - processed0,
+                steps / self.itype.speed)
+        return emitted
+
+    def submit(self, req: Request):
+        assert self.serving, self.state
+        self.engine.submit(req)
+
+    def restore(self, snaps: List[SlotSnapshot]):
+        assert self.serving, self.state
+        self.engine.restore_slots(snaps)
+
+    # ------------------------------------------------------------- drain
+    def drain(self) -> Tuple[List[SlotSnapshot], List[Request],
+                             Tuple[float, float]]:
+        """Checkpoint in-flight slots through the store and empty the engine.
+
+        Returns (snapshots, untouched queued requests, (checkpoint_s,
+        restore_s)).  The snapshots round-trip through ``InMemoryStore`` so
+        the §IV checkpoint/restore stages are actually exercised and
+        timed, not assumed.
+        """
+        self.state = ReplicaState.DRAINING
+        snaps, queued = self.engine.drain()
+        ckpt_s = restore_s = 0.0
+        if snaps:
+            import numpy as np
+            name = f"drain_r{self.rid}"
+            ck0 = self.store.timer.stages.get("checkpoint", 0.0)
+            rs0 = self.store.timer.stages.get("restore", 0.0)
+            self.store.save(name, [s.cache for s in snaps])
+            caches = self.store.restore(name)
+            ckpt_s = self.store.timer.stages["checkpoint"] - ck0
+            restore_s = self.store.timer.stages["restore"] - rs0
+            for s, c in zip(snaps, caches):
+                s.cache = {k: np.asarray(v) for k, v in c.items()}
+            self.store.drop(name)
+        return snaps, queued, (ckpt_s, restore_s)
+
+    def terminate(self):
+        self.state = ReplicaState.TERMINATED

@@ -1,0 +1,129 @@
+"""Admission queue + dispatch over replicated ServingEngines.
+
+Two policies, the serving analogue of the paper's Fig 3 A/B:
+
+* ``RoundRobinRouter`` — rate-oblivious baseline: queued requests are
+  pinned to replicas cyclically, regardless of measured speed.
+* ``RateAwareRouter``  — the paper's GreedyRefine applied to serving:
+  requests are chares with load = remaining token-units, replicas are PEs
+  with *measured* tokens/sec rates (from the shared ``RateMonitor``), and
+  in-flight work is non-migratable ``base`` load.  Every dispatch round
+  reclaims not-yet-admitted requests, places new arrivals on the
+  earliest-finishing replica, then runs ``greedy_refine`` so placements
+  self-correct as measured rates drift — with the minimum number of
+  queue migrations (§III-B).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.loadbalance import greedy_refine
+from repro.serving.engine import Request
+
+from repro.cluster.replica import Replica
+
+
+class Router:
+    """Base: global admission queue; subclasses decide placement."""
+
+    name = "base"
+
+    def __init__(self):
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def requeue(self, reqs: Sequence[Request]):
+        """Drained (checkpoint-free) requests come back to the front."""
+        self.queue = list(reqs) + self.queue
+
+    def dispatch(self, replicas: List[Replica],
+                 rates: Dict[int, float]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Rate-oblivious baseline: cycle admitting replicas."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        super().__init__()
+        self._next = 0
+
+    def dispatch(self, replicas: List[Replica],
+                 rates: Dict[int, float]) -> int:
+        targets = [r for r in replicas if r.admitting]
+        if not targets or not self.queue:
+            return 0
+        n = 0
+        while self.queue:
+            req = self.queue.pop(0)
+            rep = targets[self._next % len(targets)]
+            self._next += 1
+            rep.submit(req)
+            n += 1
+        return n
+
+
+class RateAwareRouter(Router):
+    """GreedyRefine dispatch on measured rates (paper §III applied here)."""
+
+    name = "rate_aware"
+
+    def __init__(self, tolerance: float = 1.05):
+        super().__init__()
+        self.tolerance = tolerance
+
+    def dispatch(self, replicas: List[Replica],
+                 rates: Dict[int, float]) -> int:
+        targets = [r for r in replicas if r.admitting]
+        if not targets:
+            return 0
+        # reclaim queued-but-unadmitted work so placement can be revised
+        pending: List[Request] = []
+        prev_home: Dict[int, int] = {}
+        for pe, rep in enumerate(targets):
+            for req in rep.engine.reclaim_queue():
+                prev_home[req.rid] = pe
+                pending.append(req)
+        pending.extend(self.queue)
+        self.queue = []
+        if not pending:
+            return 0
+
+        rate = np.asarray([max(rates.get(r.rid, 1.0), 1e-9)
+                           for r in targets])
+        # in-flight slots are pinned: they contribute fixed base load
+        base = np.asarray([float(r.engine.backlog_tokens())
+                           for r in targets])
+        loads = np.asarray([float(q.total_tokens) for q in pending])
+
+        # earliest-finish initial placement for requests with no home yet
+        scaled = base / rate
+        current = np.zeros(len(pending), dtype=np.int64)
+        for i, req in enumerate(pending):
+            if req.rid in prev_home:
+                current[i] = prev_home[req.rid]
+                scaled[current[i]] += loads[i] / rate[current[i]]
+            else:
+                pe = int(np.argmin(scaled + loads[i] / rate))
+                current[i] = pe
+                scaled[pe] += loads[i] / rate[pe]
+
+        res = greedy_refine(loads, len(targets), rates=rate,
+                            current=current, base=base,
+                            tolerance=self.tolerance)
+        for i, req in enumerate(pending):
+            targets[int(res.assignment[i])].submit(req)
+        return len(pending)
+
+
+ROUTERS = {
+    "round_robin": RoundRobinRouter,
+    "rate_aware": RateAwareRouter,
+}

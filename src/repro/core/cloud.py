@@ -114,6 +114,57 @@ class StageCostModel:
         }
 
 
+# ------------------------------------------------------------------ feed
+@dataclasses.dataclass(frozen=True)
+class SpotNotice:
+    """One spot-lifecycle event delivered to a subscriber."""
+    t: float
+    kind: str       # rebalance_recommendation | interruption_notice | terminate
+    target: int     # subscriber-defined id (instance / serving replica)
+
+
+class SpotEventFeed:
+    """Deterministic spot-lifecycle event source for external subscribers.
+
+    ``CloudManager`` runs a closed-loop simulation of the *training* fleet;
+    subsystems that own their own execution loop (the serving cluster)
+    instead subscribe to this feed, which emits the same §IV lifecycle per
+    injected interruption: a *rebalance recommendation* leading the
+    2-minute *interruption notice* by ``rebalance_lead`` seconds, and the
+    *terminate* following ``notice_deadline`` seconds after the notice —
+    the AWS FIS analogue used in the paper's experiments.
+    """
+
+    def __init__(self, *, rebalance_lead: float = 180.0,
+                 notice_deadline: float = 120.0):
+        self.rebalance_lead = rebalance_lead
+        self.notice_deadline = notice_deadline
+        self._events: List[Tuple[float, int, SpotNotice]] = []
+        self._seq = itertools.count()
+
+    def _push(self, ev: SpotNotice):
+        heapq.heappush(self._events, (ev.t, next(self._seq), ev))
+
+    def inject_interruption(self, t: float, target: int):
+        """FIS analogue: schedule the full lifecycle for ``target``."""
+        self._push(SpotNotice(t, "rebalance_recommendation", target))
+        t_notice = t + self.rebalance_lead
+        self._push(SpotNotice(t_notice, "interruption_notice", target))
+        self._push(SpotNotice(t_notice + self.notice_deadline, "terminate",
+                              target))
+
+    def poll(self, now: float) -> List[SpotNotice]:
+        """Pop every event due at or before ``now``, in time order."""
+        due = []
+        while self._events and self._events[0][0] <= now:
+            due.append(heapq.heappop(self._events)[2])
+        return due
+
+    @property
+    def next_event_t(self) -> float:
+        return self._events[0][0] if self._events else math.inf
+
+
 # ------------------------------------------------------------------ manager
 @dataclasses.dataclass
 class RunReport:

@@ -1,0 +1,22 @@
+"""Version-compat shims for fast-moving jax APIs.
+
+The repo targets current jax, but CI / dev containers pin older releases;
+every shim here prefers the modern spelling and falls back.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (<=0.4)."""
+    modern = getattr(jax, "shard_map", None)
+    if modern is not None:
+        return modern(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy
+    if "check_vma" in kwargs:  # renamed from check_rep
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)

@@ -36,11 +36,20 @@ class LBResult:
     baseline_makespan: float        # makespan of the input placement
 
 
-def _makespan(assignment, loads, rates) -> float:
+def _makespan(assignment, loads, rates, base=None) -> float:
     n_pes = len(rates)
-    per_pe = np.zeros(n_pes)
+    per_pe = np.zeros(n_pes) if base is None \
+        else np.asarray(base, dtype=np.float64).copy()
     np.add.at(per_pe, assignment, loads)
     return float((per_pe / rates).max())
+
+
+def _norm_base(base, n_pes) -> np.ndarray:
+    if base is None:
+        return np.zeros(n_pes)
+    b = np.asarray(base, dtype=np.float64)
+    assert len(b) == n_pes
+    return b
 
 
 def _norm_rates(rates, n_pes) -> np.ndarray:
@@ -53,12 +62,19 @@ def _norm_rates(rates, n_pes) -> np.ndarray:
 
 def greedy(loads: Sequence[float], n_pes: int,
            rates: Optional[Sequence[float]] = None,
-           current: Optional[Sequence[int]] = None) -> LBResult:
-    """GreedyLB: heaviest-first onto earliest-finishing PE."""
+           current: Optional[Sequence[int]] = None,
+           base: Optional[Sequence[float]] = None) -> LBResult:
+    """GreedyLB: heaviest-first onto earliest-finishing PE.
+
+    ``base`` is optional non-migratable load already committed to each PE
+    (e.g. in-flight serving requests pinned to their replica); PEs start
+    from ``base[pe]/rates[pe]`` instead of zero.
+    """
     loads = np.asarray(loads, dtype=np.float64)
     rates = _norm_rates(rates, n_pes)
+    base = _norm_base(base, n_pes)
     order = np.argsort(-loads)
-    finish = [(0.0, pe) for pe in range(n_pes)]
+    finish = [(base[pe] / rates[pe], pe) for pe in range(n_pes)]
     heapq.heapify(finish)
     assignment = np.zeros(len(loads), dtype=np.int64)
     for obj in order:
@@ -70,33 +86,36 @@ def greedy(loads: Sequence[float], n_pes: int,
     return LBResult(
         assignment=assignment,
         migrations=int((assignment != cur).sum()),
-        makespan=_makespan(assignment, loads, rates),
-        baseline_makespan=_makespan(cur, loads, rates),
+        makespan=_makespan(assignment, loads, rates, base),
+        baseline_makespan=_makespan(cur, loads, rates, base),
     )
 
 
 def greedy_refine(loads: Sequence[float], n_pes: int,
                   rates: Optional[Sequence[float]] = None,
                   current: Optional[Sequence[int]] = None,
-                  tolerance: float = 1.05) -> LBResult:
+                  tolerance: float = 1.05,
+                  base: Optional[Sequence[float]] = None) -> LBResult:
     """GreedyRefine: migrate as few objects as possible.
 
     PEs with scaled load above ``tolerance * ideal`` donate their smallest
     objects; donations go to the PE that would finish them earliest.
+    ``base`` is non-migratable per-PE load (see ``greedy``).
     """
     loads = np.asarray(loads, dtype=np.float64)
     n_objs = len(loads)
     rates = _norm_rates(rates, n_pes)
+    base = _norm_base(base, n_pes)
     if current is None:
         # no placement yet: fall back to greedy (initial map)
-        return greedy(loads, n_pes, rates)
+        return greedy(loads, n_pes, rates, base=base)
     assignment = np.asarray(current, dtype=np.int64).copy()
-    baseline = _makespan(assignment, loads, rates)
+    baseline = _makespan(assignment, loads, rates, base)
 
-    per_pe = np.zeros(n_pes)
+    per_pe = base.copy()
     np.add.at(per_pe, assignment, loads)
     scaled = per_pe / rates
-    ideal = loads.sum() / rates.sum()
+    ideal = (loads.sum() + base.sum()) / rates.sum()
     threshold = tolerance * ideal
 
     # objects on overloaded PEs, lightest first (cheapest migrations first)
@@ -124,7 +143,7 @@ def greedy_refine(loads: Sequence[float], n_pes: int,
     return LBResult(
         assignment=assignment,
         migrations=moved,
-        makespan=_makespan(assignment, loads, rates),
+        makespan=_makespan(assignment, loads, rates, base),
         baseline_makespan=baseline,
     )
 

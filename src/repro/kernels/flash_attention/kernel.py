@@ -86,6 +86,9 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
                                block_kv=block_kv, causal=causal,
                                scale=scale)
     from jax.experimental.pallas import tpu as pltpu
+    # renamed TPUCompilerParams -> CompilerParams across pallas releases
+    compiler_params_cls = getattr(pltpu, "CompilerParams", None) \
+        or pltpu.TPUCompilerParams
     return pl.pallas_call(
         kernel,
         grid=(b, h, nq, nk),
@@ -105,7 +108,7 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params_cls(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

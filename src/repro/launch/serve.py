@@ -3,6 +3,11 @@
 CPU-scale demo (reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --reduced \
       --requests 8 --max-new 8
+
+Cluster mode — replicated engines on a heterogeneous spot fleet, with
+rate-aware routing and a drained interruption:
+  PYTHONPATH=src python -m repro.launch.serve --cluster --fleet 2x2.0,2x0.7 \
+      --router rate_aware --requests 24 --interrupt-at 4
 """
 
 from __future__ import annotations
@@ -11,11 +16,83 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import model_zoo as zoo
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import ServingEngine
+
+
+def _make_requests(args, cfg):
+    from repro.serving.workload import synthetic_requests
+    return synthetic_requests(
+        args.requests, cfg.vocab_size, seed=args.seed,
+        prompt_len=(3, min(12, args.max_seq // 2)), max_new=args.max_new)
+
+
+def _parse_fleet(spec: str):
+    """'2x2.0,2x0.7' -> two speed-2.0 replicas + two speed-0.7 replicas."""
+    from repro.cluster import InstanceType
+    fleet = []
+    try:
+        for part in spec.split(","):
+            count, speed = part.split("x")
+            for _ in range(int(count)):
+                fleet.append(InstanceType(f"spot.{speed}x", float(speed)))
+    except ValueError:
+        raise SystemExit(
+            f"bad --fleet spec {spec!r}: expected '<count>x<speed>,...' "
+            f"like '2x2.0,2x0.7'")
+    if not fleet:
+        raise SystemExit("--fleet spec produced an empty fleet")
+    return fleet
+
+
+def run_single(args, cfg, params):
+    engine = ServingEngine(cfg, params, batch_size=args.batch_size,
+                           max_seq=args.max_seq,
+                           temperature=args.temperature, seed=args.seed)
+    reqs = _make_requests(args, cfg)
+    for req in reqs:
+        engine.submit(req)
+    stats = engine.run_until_idle()
+    done = sum(r.done for r in reqs)
+    print(f"arch={cfg.name} served {done}/{len(reqs)} requests, "
+          f"{stats['tokens']} tokens in {stats['seconds']:.2f}s "
+          f"({stats['tok_per_s']:.1f} tok/s)")
+
+
+def run_cluster(args, cfg, params):
+    from repro.cluster import ROUTERS, ServingCluster
+    cl = ServingCluster(cfg, params, _parse_fleet(args.fleet),
+                        router=ROUTERS[args.router](),
+                        batch_size=args.batch_size, max_seq=args.max_seq,
+                        temperature=args.temperature,
+                        dt=1.0, seed=args.seed,
+                        rebalance_lead=args.rebalance_lead,
+                        notice_deadline=args.notice_deadline)
+    reqs = _make_requests(args, cfg)
+    for req in reqs:
+        cl.submit(req, at=0.0)
+    if args.interrupt_at is not None:
+        cl.inject_interruption(t=args.interrupt_at, replica_rid=0)
+    t0 = time.perf_counter()
+    out = cl.run()
+    wall = time.perf_counter() - t0
+    print(f"arch={cfg.name} router={args.router} fleet={args.fleet}")
+    print(f"  completed {out['completed']}/{out['submitted']} "
+          f"(dropped {out['dropped']}), {out['total_tokens']} tokens")
+    print(f"  virtual: makespan={out['virtual_seconds']:.0f}s "
+          f"p50={out['p50_latency']:.1f}s p99={out['p99_latency']:.1f}s "
+          f"agg={out['tok_per_s']:.2f} tok/s  (wall {wall:.1f}s)")
+    if out["drains"]:
+        print(f"  drains={out['drains']} migrated_slots="
+              f"{out['migrated_slots']} ckpt+restore="
+              f"{out['interruption_overhead_s']*1e3:.1f}ms")
+    for rs in cl.metrics.per_replica():
+        print(f"  replica r{rs['rid']} {rs['itype']}: {rs['tokens']} tok "
+              f"@ {rs['tok_per_s']:.2f} tok/s (measured)")
+    for t, msg in cl.timeline:
+        print(f"  [{t:7.1f}s] {msg}")
 
 
 def main():
@@ -28,30 +105,28 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # cluster mode
+    ap.add_argument("--cluster", action="store_true",
+                    help="serve over a replicated heterogeneous fleet")
+    ap.add_argument("--fleet", default="2x2.0,2x0.7",
+                    help="fleet spec: '<count>x<speed>,...'")
+    ap.add_argument("--router", default="rate_aware",
+                    choices=("rate_aware", "round_robin"))
+    ap.add_argument("--interrupt-at", type=float, default=None,
+                    help="inject a spot interruption on replica 0 at this "
+                         "virtual time")
+    ap.add_argument("--rebalance-lead", type=float, default=6.0)
+    ap.add_argument("--notice-deadline", type=float, default=4.0)
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
     params = zoo.init_state(cfg, jax.random.PRNGKey(args.seed)).params
-    engine = ServingEngine(cfg, params, batch_size=args.batch_size,
-                           max_seq=args.max_seq,
-                           temperature=args.temperature, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-    reqs = []
-    for rid in range(args.requests):
-        plen = int(rng.integers(3, min(12, args.max_seq // 2)))
-        req = Request(rid=rid,
-                      prompt=rng.integers(0, cfg.vocab_size, plen,
-                                          dtype=np.int32),
-                      max_new_tokens=args.max_new)
-        reqs.append(req)
-        engine.submit(req)
-    stats = engine.run_until_idle()
-    done = sum(r.done for r in reqs)
-    print(f"arch={cfg.name} served {done}/{len(reqs)} requests, "
-          f"{stats['tokens']} tokens in {stats['seconds']:.2f}s "
-          f"({stats['tok_per_s']:.1f} tok/s)")
+    if args.cluster:
+        run_cluster(args, cfg, params)
+    else:
+        run_single(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,1 @@
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, SlotSnapshot

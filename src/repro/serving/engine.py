@@ -2,15 +2,27 @@
 
 Small but real: request queue, slot-based batching (a fixed decode batch of
 ``batch_size`` slots; finished sequences release their slot to the next
-request), prefill-then-decode, greedy or temperature sampling.  The decode
+request), streamed prefill, greedy or temperature sampling.  The decode
 step is the same ``serve_step`` the dry run lowers at 32k/500k scale.
+
+Two properties make the engine drivable by a cluster loop (repro.cluster):
+
+* **Non-blocking ``step()``** — every call runs exactly ONE jitted decode
+  over the whole batch.  Prefill is streamed through the same decode path,
+  one prompt token per step per admitting slot, with an ``active`` mask so
+  idle slots' caches never advance.  No call ever loops over a full prompt.
+* **Checkpointable slots** — ``snapshot_slots()`` captures each occupied
+  slot (request progress + that slot's KV/state cache columns) as host
+  arrays; ``restore_slots()`` admits snapshots into any engine built from
+  the same ``(cfg, max_seq)``.  This is the migration substrate for the
+  cluster's spot-instance drain (paper §IV Mode C applied to serving).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,37 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
+    @property
+    def total_tokens(self) -> int:
+        """Token-units of work: prompt + planned new tokens (LB load)."""
+        return len(self.prompt) + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """A checkpointed in-flight request: enough to resume decode anywhere."""
+    request: Request
+    fed: int                    # prompt+generated tokens already in cache
+    next_tok: int               # next token to feed
+    cache_len: int
+    cache: Dict[str, np.ndarray]  # this slot's cache columns (host)
+
+    @property
+    def remaining_tokens(self) -> int:
+        return max(self.request.total_tokens - self.fed, 1)
+
+
+# One jitted serve_step per (cfg, shape): replicas in a cluster share the
+# compiled step instead of recompiling the identical graph per engine.
+_STEP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig], Any] = {}
+
+
+def _shared_step(cfg: ModelConfig, shape: ShapeConfig):
+    key = (cfg, shape)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(zoo.make_serve_step(cfg, shape))
+    return _STEP_CACHE[key]
+
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
@@ -40,50 +83,99 @@ class ServingEngine:
         self.rng = jax.random.PRNGKey(seed)
         self.shape = ShapeConfig("serve", max_seq, batch_size, "decode")
         self.state = zoo.init_decode_state(cfg, self.shape, fill_len=0)
-        self._step = jax.jit(zoo.make_serve_step(cfg, self.shape))
+        self._step = _shared_step(cfg, self.shape)
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._queue: List[Request] = []
+        self._restore: List[SlotSnapshot] = []
         self._next_tok = np.zeros((batch_size, 1), np.int32)
+        self._fed = [0] * batch_size
+        self._completed: List[Request] = []
+        self.processed_tokens = 0   # prefill + decode work units (rate feed)
+        # per-leaf batch axis of the cache pytree (slot slicing/placement)
+        self._cache_axes = {
+            k: ax.index("cache_batch")
+            for k, ax in zoo.decode_state_logical_axes(cfg).cache.items()}
 
     # ------------------------------------------------------------- requests
     def submit(self, req: Request):
+        if len(req.prompt) > self.max_seq - 1:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"cannot fit a max_seq={self.max_seq} cache")
         self._queue.append(req)
 
+    def reclaim_queue(self) -> List[Request]:
+        """Hand not-yet-admitted requests back (router re-dispatch)."""
+        queued, self._queue = self._queue, []
+        return queued
+
+    def pop_completed(self) -> List[Request]:
+        done, self._completed = self._completed, []
+        return done
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue) + len(self._restore)
+
+    @property
+    def free_slots(self) -> int:
+        return self.batch - self.n_active
+
+    def backlog_tokens(self) -> float:
+        """Remaining token-units across slots + queue (the router's load)."""
+        load = 0.0
+        for slot, req in enumerate(self._slots):
+            if req is not None:
+                load += max(req.total_tokens - self._fed[slot], 1)
+        load += sum(s.remaining_tokens for s in self._restore)
+        load += sum(r.total_tokens for r in self._queue)
+        return load
+
+    def _set_cache_len(self, slot: int, value: int):
+        cl = np.array(self.state.cache_len)
+        cl[slot] = value
+        self.state = zoo.DecodeState(self.state.cache, jnp.asarray(cl))
+
     def _admit(self):
-        """Fill free slots: token-by-token prefill through serve_step.
-
-        (Chunked bulk prefill exists as ``make_prefill``; slot-level decode
-        prefill keeps the engine simple and exercises the same cache path.)
-        """
+        """Fill free slots from the restore queue, then the request queue."""
         for slot in range(self.batch):
-            if self._slots[slot] is not None or not self._queue:
+            if self._slots[slot] is not None:
                 continue
-            req = self._queue.pop(0)
-            self._slots[slot] = req
-            # reset this slot's cache_len to 0
-            cl = np.array(self.state.cache_len)
-            cl[slot] = 0
-            self.state = zoo.DecodeState(self.state.cache, jnp.asarray(cl))
-            # feed prompt tokens one at a time (slot-isolated prefill)
-            for t in req.prompt[:-1]:
-                tok = np.array(self._next_tok)
-                tok[slot, 0] = t
-                self._decode_all(jnp.asarray(tok))
-            self._next_tok[slot, 0] = req.prompt[-1]
+            if self._restore:
+                self._install(self._restore.pop(0), slot)
+            elif self._queue:
+                req = self._queue.pop(0)
+                self._slots[slot] = req
+                self._fed[slot] = 0
+                self._next_tok[slot, 0] = req.prompt[0]
+                self._set_cache_len(slot, 0)
 
-    def _decode_all(self, tokens):
+    def _decode_all(self, tokens, active):
         logits, self.state = self._step(self.params, self.state,
-                                        {"tokens": tokens})
+                                        {"tokens": tokens, "active": active})
         return logits
 
     # ------------------------------------------------------------- stepping
     def step(self) -> int:
-        """One engine step: admit, decode one token for every active slot."""
+        """One engine step: admit, then ONE decode over every occupied slot.
+
+        Slots mid-prefill consume their next prompt token; slots past
+        prefill sample and emit one new token.  Returns tokens emitted
+        (generated tokens only — prefill consumption doesn't count).
+        """
         self._admit()
-        active = [i for i, r in enumerate(self._slots) if r is not None]
-        if not active:
+        occupied = [i for i, r in enumerate(self._slots) if r is not None]
+        if not occupied:
             return 0
-        logits = self._decode_all(jnp.asarray(self._next_tok))
+        active = np.zeros((self.batch,), np.int32)
+        active[occupied] = 1
+        self.processed_tokens += len(occupied)
+        logits = self._decode_all(jnp.asarray(self._next_tok),
+                                  jnp.asarray(active))
         last = np.asarray(logits[:, -1, :])
         if self.temperature > 0:
             self.rng, sub = jax.random.split(self.rng)
@@ -92,16 +184,22 @@ class ServingEngine:
         else:
             nxt = last.argmax(-1)
         emitted = 0
-        for slot in active:
+        cache_len = np.asarray(self.state.cache_len)
+        for slot in occupied:
             req = self._slots[slot]
+            self._fed[slot] += 1
+            if self._fed[slot] < len(req.prompt):
+                # still prefilling: stream the next prompt token
+                self._next_tok[slot, 0] = req.prompt[self._fed[slot]]
+                continue
             tok = int(nxt[slot])
             req.out_tokens.append(tok)
             emitted += 1
             self._next_tok[slot, 0] = tok
-            seq_len = int(np.asarray(self.state.cache_len)[slot])
             if (len(req.out_tokens) >= req.max_new_tokens
-                    or seq_len >= self.max_seq - 1):
+                    or int(cache_len[slot]) >= self.max_seq - 1):
                 req.done = True
+                self._completed.append(req)
                 self._slots[slot] = None
         return emitted
 
@@ -109,9 +207,59 @@ class ServingEngine:
         t0 = time.perf_counter()
         tokens = 0
         steps = 0
-        while (any(self._slots) or self._queue) and steps < max_steps:
+        while (any(r is not None for r in self._slots) or self._queue
+               or self._restore) and steps < max_steps:
             tokens += self.step()
             steps += 1
         dt = time.perf_counter() - t0
         return {"tokens": tokens, "steps": steps, "seconds": dt,
                 "tok_per_s": tokens / max(dt, 1e-9)}
+
+    # --------------------------------------------------------- checkpointing
+    def snapshot_slots(self) -> List[SlotSnapshot]:
+        """Checkpoint and release every occupied slot (drain semantics)."""
+        occupied = [i for i, r in enumerate(self._slots) if r is not None]
+        if not occupied:
+            return []
+        cache_host = {k: np.asarray(jax.device_get(v))
+                      for k, v in self.state.cache.items()}
+        cache_len = np.asarray(self.state.cache_len)
+        snaps = []
+        for slot in occupied:
+            snaps.append(SlotSnapshot(
+                request=self._slots[slot],
+                fed=self._fed[slot],
+                next_tok=int(self._next_tok[slot, 0]),
+                cache_len=int(cache_len[slot]),
+                cache={k: v.take(slot, axis=self._cache_axes[k])
+                       for k, v in cache_host.items()},
+            ))
+            self._slots[slot] = None
+        return snaps
+
+    def restore_slots(self, snapshots: List[SlotSnapshot]):
+        """Queue checkpointed slots for admission (cache written on admit)."""
+        self._restore.extend(snapshots)
+
+    def drain(self) -> Tuple[List[SlotSnapshot], List[Request]]:
+        """Empty the engine: checkpoints of in-flight work + untouched queue."""
+        snaps = self.snapshot_slots()
+        snaps.extend(self._restore)
+        self._restore = []
+        queued, self._queue = self._queue, []
+        return snaps, queued
+
+    def _install(self, snap: SlotSnapshot, slot: int):
+        """Write a snapshot's cache columns into ``slot`` and resume it."""
+        new_cache = {}
+        for k, arr in self.state.cache.items():
+            ax = self._cache_axes[k]
+            idx = [slice(None)] * arr.ndim
+            idx[ax] = slot
+            new_cache[k] = arr.at[tuple(idx)].set(
+                jnp.asarray(snap.cache[k], arr.dtype))
+        self.state = zoo.DecodeState(new_cache, self.state.cache_len)
+        self._set_cache_len(slot, snap.cache_len)
+        self._slots[slot] = snap.request
+        self._fed[slot] = snap.fed
+        self._next_tok[slot, 0] = snap.next_tok

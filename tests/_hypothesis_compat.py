@@ -1,0 +1,24 @@
+"""Shared hypothesis import fallback for property-test modules.
+
+Without hypothesis installed, ``@given`` tests skip individually (with a
+pointer to requirements-dev.txt) while plain unit tests in the same
+module still run.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="needs hypothesis (pip install -r requirements-dev.txt)"
+        )(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _StrategyStub()

@@ -60,9 +60,13 @@ def test_c4_c5_mode_comparison():
 def test_training_loss_decreases():
     from repro.configs import ARCHS, SHAPES
     from repro.launch.train import ElasticTrainer
+    from repro.optim import adamw
     cfg = ARCHS["llama3.2-3b"].reduced()
     shape = SHAPES["train_4k"].reduced()
-    tr = ElasticTrainer(cfg, shape, n_devices=1, seed=0)
+    # default HParams warm up over 100 steps; at 15 test steps the lr is
+    # still ~0, so use a test-scale schedule that actually optimizes
+    hp = adamw.HParams(lr=1e-3, warmup_steps=2, total_steps=100)
+    tr = ElasticTrainer(cfg, shape, n_devices=1, seed=0, hp=hp)
     tr.train(15, log_every=0)
     first = np.mean([m["loss"] for m in tr.metrics_log[:3]])
     last = np.mean([m["loss"] for m in tr.metrics_log[-3:]])
