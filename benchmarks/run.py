@@ -17,9 +17,15 @@ Sections (run all, or pick with positional names / ``--scenario``):
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
+
+# `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the
+# repo root must be there too for `from benchmarks.measure import ...`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def row(name: str, us_per_call: float, derived: str = ""):
@@ -176,48 +182,54 @@ def kernels():
 
 
 # ------------------------------------------------------------------ cluster
-def cluster_hetero():
+def cluster_hetero(arrival: str = "batch", quick: bool = False):
     """Serving-cluster A/B (paper §III/§IV on the serving workload).
 
-    A 2-fast/2-slow replica fleet serves the same request batch under
+    A 2-fast/2-slow replica fleet serves the same request stream under
     round-robin and rate-aware routing; one fast replica receives a spot
     interruption mid-run and is drained (slots checkpointed + migrated).
-    Rate-aware routing must win on p99 latency AND aggregate tokens/sec,
-    and the drain must drop zero requests.
+    ``arrival`` selects the offered-load model: ``batch`` (closed-loop,
+    everything at t=0), ``poisson:<rate>`` or ``trace:<file>``
+    (open-loop, scheduled one arrival event at a time).  Rate-aware
+    routing must win on p99 latency AND aggregate tokens/sec, and the
+    drain must drop zero requests.
     """
     import jax
     from repro.cluster import (InstanceType, ROUTERS, ServingCluster)
     from repro.configs import get_config
     from repro.models import model_zoo as zoo
-    from repro.serving.workload import synthetic_requests
+    from repro.serving.workload import make_arrivals, synthetic_requests
 
     cfg = get_config("granite-8b").reduced()
     params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
     fleet = [InstanceType("fast.2x", 2.0), InstanceType("fast.2x", 2.0),
              InstanceType("slow.1x", 0.7), InstanceType("slow.1x", 0.7)]
+    n_requests, max_seq = (12, 32) if quick else (24, 48)
 
     results = {}
     for name, router_cls in ROUTERS.items():
         cl = ServingCluster(cfg, params, fleet, router=router_cls(),
-                            dt=1.0, batch_size=2, max_seq=48,
+                            dt=1.0, batch_size=2, max_seq=max_seq,
                             rebalance_lead=6.0, notice_deadline=4.0)
-        reqs = synthetic_requests(24, cfg.vocab_size, seed=0,
+        reqs = synthetic_requests(n_requests, cfg.vocab_size, seed=0,
                                   prompt_len=(3, 9), max_new=(4, 12))
-        for r in reqs:
-            cl.submit(r, at=0.0)
+        cl.attach_arrivals(make_arrivals(arrival, reqs, seed=0))
         cl.inject_interruption(t=4.0, replica_rid=0)
         out = cl.run(max_time=10_000)
         results[name] = out
-        lost = sum(r.max_new_tokens - len(r.out_tokens) for r in reqs)
-        row(f"cluster_hetero_{name}_p50", out["p50_latency"] * 1e6,
-            f"virtual_s={out['p50_latency']:.1f}")
-        row(f"cluster_hetero_{name}_p99", out["p99_latency"] * 1e6,
+        # count loss only over requests actually offered (a short trace
+        # file truncates the request list; that is not a drain drop)
+        offered = [r for r in reqs if r.rid in cl.metrics.traces]
+        lost = sum(r.max_new_tokens - len(r.out_tokens) for r in offered)
+        tag = f"cluster_hetero_{name}"
+        row(f"{tag}_p50", out["p50_latency"] * 1e6,
+            f"virtual_s={out['p50_latency']:.1f};arrival={arrival}")
+        row(f"{tag}_p99", out["p99_latency"] * 1e6,
             f"virtual_s={out['p99_latency']:.1f}")
-        row(f"cluster_hetero_{name}_throughput", 0.0,
+        row(f"{tag}_throughput", 0.0,
             f"tok_per_s={out['tok_per_s']:.2f};"
             f"makespan_s={out['virtual_seconds']:.0f}")
-        row(f"cluster_hetero_{name}_drain", out["interruption_overhead_s"]
-            * 1e6,
+        row(f"{tag}_drain", out["interruption_overhead_s"] * 1e6,
             f"dropped={out['dropped']};migrated={out['migrated_slots']};"
             f"tokens_lost={lost}")
         assert out["dropped"] == 0 and lost == 0, \
@@ -255,11 +267,18 @@ SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
 
 
 def main() -> None:
+    import inspect
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("sections", nargs="*",
                     help="section names to run (default: all)")
     ap.add_argument("--scenario", action="append", default=[],
                     help="alias for a positional section name")
+    ap.add_argument("--arrival", default="batch",
+                    help="offered-load model for cluster scenarios: "
+                         "batch | poisson:<rate> | trace:<file>")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced problem sizes (CI smoke)")
     args = ap.parse_args()
     names = list(args.sections) + list(args.scenario)
     known = {fn.__name__ for fn in SECTIONS}
@@ -267,12 +286,14 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown section(s): {sorted(unknown)}; "
                  f"choose from {sorted(known)}")
+    opts = {"arrival": args.arrival, "quick": args.quick}
     print("name,us_per_call,derived")
     for fn in SECTIONS:
         if names and fn.__name__ not in names:
             continue
+        accepted = inspect.signature(fn).parameters
         t0 = time.perf_counter()
-        fn()
+        fn(**{k: v for k, v in opts.items() if k in accepted})
         print(f"# section {fn.__name__} took {time.perf_counter()-t0:.1f}s",
               flush=True)
 

@@ -16,7 +16,7 @@ import jax
 from repro.cluster import InstanceType, ROUTERS, ServingCluster
 from repro.configs import get_config
 from repro.models import model_zoo as zoo
-from repro.serving.workload import synthetic_requests
+from repro.serving.workload import PoissonArrivals, synthetic_requests
 
 cfg = get_config("granite-8b").reduced()
 params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
@@ -24,16 +24,14 @@ fleet = [InstanceType("fast.2x", 2.0), InstanceType("fast.2x", 2.0),
          InstanceType("slow.1x", 0.7), InstanceType("slow.1x", 0.7)]
 
 
-def request_batch():
-    return synthetic_requests(20, cfg.vocab_size, seed=0)
-
-
 for name, router_cls in ROUTERS.items():
     cluster = ServingCluster(cfg, params, fleet, router=router_cls(),
                              dt=1.0, batch_size=2, max_seq=32,
                              rebalance_lead=6.0, notice_deadline=4.0)
-    for req in request_batch():
-        cluster.submit(req, at=0.0)
+    # open-loop offered load: 3 req/s Poisson, scheduled one arrival
+    # event at a time on the shared runtime loop
+    reqs = synthetic_requests(20, cfg.vocab_size, seed=0)
+    cluster.attach_arrivals(PoissonArrivals(reqs, 3.0, seed=0))
     cluster.inject_interruption(t=4.0, replica_rid=0)   # FIS analogue
     out = cluster.run()
     print(f"{name:12s} makespan={out['virtual_seconds']:5.0f}s "

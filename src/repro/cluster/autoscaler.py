@@ -2,7 +2,8 @@
 
 Subscribes to two signal sources:
 
-* ``SpotEventFeed`` (core.cloud) — the §IV spot lifecycle.  On a
+* the cluster's bound ``FaultTrace`` (repro.runtime) — the §IV spot
+  lifecycle, delivered as ``spot`` events on the shared loop.  On a
   *rebalance recommendation* the autoscaler pre-warms a replacement
   replica (the paper's Mode C: replacements are requested at the
   recommendation, long before the 2-minute notice).  On the
@@ -67,6 +68,8 @@ class Autoscaler:
 
     def drain(self, rep: Replica, now: float):
         """Checkpoint the doomed replica's slots; re-admit them elsewhere."""
+        self.cluster.loop.cancel(rep.step_event)   # no step after the drain
+        rep.step_event = None
         snaps, queued, (ckpt_s, restore_s) = rep.drain()
         metrics = self.cluster.metrics
         metrics.drains.append(DrainRecord(

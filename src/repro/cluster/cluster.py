@@ -1,4 +1,4 @@
-"""ServingCluster: the message-driven loop binding the pieces together.
+"""ServingCluster: message-driven replicas on the shared event runtime.
 
 The serving analogue of the paper's adaptive runtime: ``ServingEngine``
 replicas are PEs, in-flight requests are migratable chares, the router is
@@ -6,29 +6,38 @@ the rate-aware load balancer, and the autoscaler is the CloudManager
 policy layer (pre-warm on rebalance recommendation, drain on the
 2-minute notice, elastic grow/shrink on load).
 
-The loop runs on a deterministic ``VirtualClock``: each tick delivers due
-request arrivals and spot events, lets the autoscaler react, dispatches
-the router, then advances every replica by ``dt`` virtual seconds (a
-replica with speed ``s`` runs ``s * dt`` real jitted decode steps).  All
-policy decisions consume *measured* rates from the shared
+There is no global lockstep tick.  The cluster registers named handlers
+on one ``repro.runtime.EventLoop``:
+
+* ``arrival``       — a request reaches the router (scheduled one-by-one
+                      by an open-loop ``ArrivalProcess`` or ``submit``);
+* ``spot``          — one §IV lifecycle event from the bound
+                      ``FaultTrace`` (shareable with ``CloudManager``);
+* ``replica_step``  — ONE engine step on one replica; each replica
+                      re-schedules its own next step ``1/speed`` virtual
+                      seconds later while it has work, so a slow replica
+                      never quantizes a fast one to a global ``dt``;
+* ``replica_ready`` — a pre-warmed replacement comes up;
+* ``control``       — periodic autoscaler evaluation while work pends.
+
+All policy decisions consume *measured* rates from the shared
 ``RateMonitor`` — never the InstanceType ground truth.
 """
 
 from __future__ import annotations
 
-import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
-from repro.core.cloud import SpotEventFeed
 from repro.core.rates import RateMonitor
+from repro.runtime import EventLoop, FaultTrace, VirtualClock
 from repro.serving.engine import Request, SlotSnapshot
 
 from repro.cluster.autoscaler import Autoscaler
-from repro.cluster.metrics import ClusterMetrics, VirtualClock
-from repro.cluster.replica import InstanceType, Replica
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.replica import InstanceType, Replica, ReplicaState
 from repro.cluster.router import RateAwareRouter, Router
 
 
@@ -41,29 +50,38 @@ class ServingCluster:
                  dt: float = 1.0, seed: int = 0,
                  rebalance_lead: float = 180.0,
                  notice_deadline: float = 120.0,
+                 trace: Optional[FaultTrace] = None,
                  autoscaler_kw: Optional[dict] = None):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.temperature = temperature
-        self.dt = dt
+        self.dt = dt                  # control-plane evaluation interval
         self.seed = seed
         self.clock = VirtualClock()
+        self.loop = EventLoop(self.clock)
         self.store = InMemoryStore()
         self.monitor = RateMonitor(len(fleet))
         self.router = router if router is not None else RateAwareRouter()
-        self.spot = SpotEventFeed(rebalance_lead=rebalance_lead,
-                                  notice_deadline=notice_deadline)
+        self.faults = trace if trace is not None else FaultTrace(
+            rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
         self.metrics = ClusterMetrics()
         self.autoscaler = Autoscaler(self, **(autoscaler_kw or {}))
         self.timeline: List[Tuple[float, str]] = []
         self._rid = itertools.count()
+        self.loop.register("arrival", self._on_arrival)
+        self.loop.register("spot", self._on_spot)
+        self.loop.register("replica_step", self._on_replica_step)
+        self.loop.register("replica_ready", self._on_replica_ready)
+        self.loop.register("control", self._on_control)
+        self.loop.register("dispatch", self._on_dispatch)
+        self.faults.bind(self.loop, kind="spot")
         self.replicas: List[Replica] = []
         for itype in fleet:
             self.launch(itype, ready_at=0.0)
-        self._arrivals: List[Tuple[float, int, Request]] = []
-        self._arr_seq = itertools.count()
+        self._control_ev = None
+        self._dispatch_ev = None
         self._parked: List[SlotSnapshot] = []
 
     # ------------------------------------------------------------- fleet
@@ -78,6 +96,8 @@ class ServingCluster:
                       ready_at=ready_at, seed=self.seed)
         self.replicas.append(rep)
         self.metrics.ensure_replica(rid, itype.name)
+        if rep.state == ReplicaState.LAUNCHING:
+            self.loop.schedule(ready_at, "replica_ready", rid=rid)
         return rep
 
     def replica_by_rid(self, rid: int) -> Optional[Replica]:
@@ -112,6 +132,7 @@ class ServingCluster:
         for s in snaps:
             tgt = min(survivors, key=key)
             tgt.restore([s])
+            self._kick(tgt, now)
             self.log(now, f"readmit req{s.request.rid} -> r{tgt.rid}")
         return True
 
@@ -120,15 +141,100 @@ class ServingCluster:
 
     # ------------------------------------------------------------- input
     def submit(self, req: Request, at: float = 0.0):
-        heapq.heappush(self._arrivals, (at, next(self._arr_seq), req))
+        self.loop.schedule(at, "arrival", request=req)
+
+    def attach_arrivals(self, process: Iterable[Tuple[float, Request]]):
+        """Open-loop arrivals: schedule the process's first request; each
+        arrival event then schedules the next (message-driven, no heap of
+        pre-materialized arrivals)."""
+        it = iter(process)
+        self._schedule_next_arrival(it)
+
+    def _schedule_next_arrival(self, it: Iterator[Tuple[float, Request]]):
+        for at, req in it:
+            self.loop.schedule(at, "arrival", request=req, source=it)
+            return
 
     def inject_interruption(self, t: float, replica_rid: int):
-        self.spot.inject_interruption(t, replica_rid)
+        self.faults.inject(t, replica_rid)
 
-    # ------------------------------------------------------------- loop
+    # ------------------------------------------------------------- handlers
+    def _on_arrival(self, ev, t: float):
+        req: Request = ev.payload["request"]
+        self.router.submit(req)
+        self.metrics.on_submit(req.rid, t)
+        source = ev.payload.get("source")
+        if source is not None:
+            self._schedule_next_arrival(source)
+        # coalesce: N same-timestamp arrivals (batch submission) trigger
+        # ONE router pass, after the last of them — not N full
+        # greedy_refine re-placements
+        if self._dispatch_ev is None:
+            self._dispatch_ev = self.loop.schedule(t, "dispatch")
+
+    def _on_dispatch(self, ev, t: float):
+        nxt = self.loop.peek()
+        if nxt is not None and nxt.kind == "arrival" and nxt.t <= t:
+            # a chained arrival at this same timestamp is still in flight
+            # (its schedule order interleaves with ours): defer the router
+            # pass behind it rather than re-placing per arrival
+            self._dispatch_ev = self.loop.schedule(t, "dispatch")
+            return
+        self._dispatch_ev = None
+        self._dispatch(t)
+
+    def _on_spot(self, ev, t: float):
+        self.autoscaler.handle_spot(ev.payload["notice"], t)
+        self._dispatch(t)
+
+    def _on_replica_ready(self, ev, t: float):
+        rep = self.replica_by_rid(ev.payload["rid"])
+        if rep is not None:
+            rep.maybe_ready(t)
+        self._dispatch(t)
+
+    def _on_replica_step(self, ev, t: float):
+        rep = self.replica_by_rid(ev.payload["rid"])
+        if rep is None:
+            return
+        rep.step_event = None
+        if not (rep.serving and rep.has_work()):
+            return                     # drained/terminated since scheduling
+        emitted = rep.step_once(t)
+        self.metrics.on_tokens(rep.rid, emitted, rep.step_interval)
+        for req in rep.completed:
+            self.metrics.on_done(req.rid, t, len(req.out_tokens))
+        rep.completed = []
+        self._kick(rep, t)
+
+    def _on_control(self, ev, t: float):
+        self._control_ev = None
+        self.autoscaler.tick(t)
+        self._dispatch(t)
+
+    # ------------------------------------------------------------- driving
+    def _kick(self, rep: Replica, now: float):
+        """Schedule ``rep``'s next engine step unless one is pending."""
+        if rep.step_event is not None:
+            return
+        if not (rep.serving and rep.has_work()):
+            return
+        rep.step_event = self.loop.schedule(
+            now + rep.step_interval, "replica_step", rid=rep.rid)
+
+    def _dispatch(self, now: float):
+        """Router pass + wake-ups; runs after any state-changing event."""
+        self._unpark(now)
+        for rep in self.router.dispatch(self.replicas, self.rates()):
+            self._kick(rep, now)
+        self._ensure_control(now)
+
+    def _ensure_control(self, now: float):
+        if self._control_ev is None and self._pending_work():
+            self._control_ev = self.loop.schedule(now + self.dt, "control")
+
     def _pending_work(self) -> bool:
-        return (bool(self._arrivals) or bool(self.router.queue)
-                or bool(self._parked)
+        return (bool(self.router.queue) or bool(self._parked)
                 or any(r.serving and r.has_work() for r in self.replicas))
 
     def _unpark(self, now: float):
@@ -137,44 +243,7 @@ class ServingCluster:
         parked, self._parked = self._parked, []
         self.readmit(parked, now)
 
-    def tick(self):
-        """One cluster step: events -> autoscaler -> router -> replicas."""
-        now = self.clock.now()
-        while self._arrivals and self._arrivals[0][0] <= now:
-            _, _, req = heapq.heappop(self._arrivals)
-            self.router.submit(req)
-            self.metrics.on_submit(req.rid, now)
-        for ev in self.spot.poll(now):
-            self.autoscaler.handle_spot(ev, now)
-        self.autoscaler.tick(now)
-        self._unpark(now)
-        self.router.dispatch(self.replicas, self.rates())
-        for rep in self.replicas:
-            busy = rep.serving and rep.has_work()
-            emitted = rep.advance(self.dt, now)
-            if emitted or busy:
-                self.metrics.on_tokens(rep.rid, emitted,
-                                       self.dt if busy else 0.0)
-            for req in rep.completed:
-                self.metrics.on_done(req.rid, now + self.dt,
-                                     len(req.out_tokens))
-            rep.completed = []
-        self.clock.advance(self.dt)
-
     def run(self, *, max_time: float = 100_000.0) -> Dict[str, float]:
-        """Drive until idle (no arrivals, queues, slots, or spot events)."""
-        while self.clock.now() < max_time:
-            if (not self._pending_work()
-                    and self.spot.next_event_t == float("inf")):
-                break
-            if (not self._pending_work()
-                    and self.spot.next_event_t > self.clock.now()):
-                # fast-forward idle time to the next spot event (bounded
-                # by max_time so a far-future event cannot stall run())
-                jump = min(self.spot.next_event_t, max_time) \
-                    - self.clock.now()
-                if jump > 0:
-                    self.clock.advance(jump)
-                continue
-            self.tick()
+        """Dispatch events until the loop drains (or ``max_time``)."""
+        self.loop.run(until=max_time)
         return self.metrics.summary(self.clock.now())

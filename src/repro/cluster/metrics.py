@@ -1,8 +1,10 @@
-"""Cluster observability: virtual clock, request traces, fleet summaries.
+"""Cluster observability: request traces, fleet summaries.
 
 Everything is keyed off *virtual* time so cluster runs are deterministic
 and reproducible on any host; only checkpoint/restore stage timings (from
-the ``InMemoryStore`` timers) are real wall-clock measurements.
+the ``InMemoryStore`` timers) are real wall-clock measurements.  The
+clock itself is the shared ``repro.runtime.VirtualClock`` (re-exported
+here for back-compat).
 """
 
 from __future__ import annotations
@@ -12,19 +14,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-
-class VirtualClock:
-    """Deterministic fake clock driving the cluster loop."""
-
-    def __init__(self, t0: float = 0.0):
-        self._t = float(t0)
-
-    def now(self) -> float:
-        return self._t
-
-    def advance(self, dt: float):
-        assert dt > 0
-        self._t += dt
+from repro.runtime import VirtualClock  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -96,13 +86,24 @@ class ClusterMetrics:
         lat = self.latencies()
         total_tokens = sum(s.tokens for s in self.replicas.values())
         done = int(sum(t.done_t is not None for t in self.traces.values()))
+        # horizon = last request completion, NOT the loop's last event —
+        # trailing bookkeeping events (a pre-warmed replica coming up, a
+        # stale step) must not dilute or equalize throughput.  tok_per_s
+        # pairs that horizon with the tokens of *completed* requests so a
+        # max_time-truncated run can't overstate throughput (on a fully
+        # drained run the two token counts coincide).
+        done_ts = [t.done_t for t in self.traces.values()
+                   if t.done_t is not None]
+        done_tokens = sum(t.tokens for t in self.traces.values()
+                          if t.done_t is not None)
+        now = max(done_ts) if done_ts else now
         out = {
             "virtual_seconds": now,
             "submitted": len(self.traces),
             "completed": done,
             "dropped": len(self.traces) - done,
             "total_tokens": total_tokens,
-            "tok_per_s": total_tokens / max(now, 1e-9),
+            "tok_per_s": done_tokens / max(now, 1e-9),
             "p50_latency": float(np.percentile(lat, 50)) if lat.size else 0.0,
             "p99_latency": float(np.percentile(lat, 99)) if lat.size else 0.0,
             "max_latency": float(lat.max()) if lat.size else 0.0,

@@ -11,10 +11,13 @@ are migratable chares.  Each replica wraps an engine with
   through an ``InMemoryStore`` (the §II-B shm substrate) and hands the
   snapshots back for re-admission elsewhere.
 
-Virtual-time pacing: ``advance(dt)`` grants the replica ``dt * speed``
-engine-step credits, so a 2x instance runs twice as many decode steps per
-virtual second.  Decode itself is real (jitted serve_step); only the
-pacing is simulated, which keeps runs deterministic on any host.
+Virtual-time pacing is *message-driven*: each replica schedules its own
+next ``replica_step`` event on the shared ``EventLoop`` at its measured
+cadence (``step_interval = 1/speed`` virtual seconds per engine step),
+so a 2x instance runs twice as many decode steps per virtual second and
+slow replicas never quantize fast ones to a global tick.  Decode itself
+is real (jitted serve_step); only the pacing is simulated, which keeps
+runs deterministic on any host.
 """
 
 from __future__ import annotations
@@ -62,9 +65,9 @@ class Replica:
         self.ready_at = ready_at
         self.state = ReplicaState.LAUNCHING if ready_at > 0 \
             else ReplicaState.RUNNING
-        self._credit = 0.0
         self.tokens_total = 0
         self.completed: List[Request] = []
+        self.step_event = None       # pending replica_step on the loop
 
     # ------------------------------------------------------------- status
     @property
@@ -84,35 +87,32 @@ class Replica:
         return self.engine.backlog_tokens() if self.serving else 0.0
 
     # ------------------------------------------------------------- driving
+    @property
+    def step_interval(self) -> float:
+        """Virtual seconds one engine step occupies on this instance."""
+        return 1.0 / self.itype.speed
+
     def maybe_ready(self, now: float):
         if self.state == ReplicaState.LAUNCHING and now >= self.ready_at:
             self.state = ReplicaState.RUNNING
 
-    def advance(self, dt: float, now: float) -> int:
-        """Run up to ``dt * speed`` engine steps; returns tokens emitted."""
+    def step_once(self, now: float) -> int:
+        """Run ONE engine step (one ``replica_step`` event); returns tokens
+        emitted.  The caller schedules the next event ``step_interval``
+        later while work remains, so pacing is per-replica, not global."""
         self.maybe_ready(now)
-        if not (self.serving or self.state == ReplicaState.DRAINING):
+        if not self.serving:
             return 0
-        self._credit += dt * self.itype.speed
-        emitted = 0
-        steps = 0
         processed0 = self.engine.processed_tokens
-        while self._credit >= 1.0 and self.has_work():
-            self._credit -= 1.0
-            emitted += self.engine.step()
-            steps += 1
-        if not self.has_work():
-            self._credit = min(self._credit, 1.0)  # no credit while idle
+        emitted = self.engine.step()
         self.tokens_total += emitted
         self.completed.extend(self.engine.pop_completed())
-        if self.monitor is not None and steps > 0:
+        processed = self.engine.processed_tokens - processed0
+        if self.monitor is not None and processed > 0:
             # measured work-units/sec (prefill counts) over the virtual
-            # time actually spent stepping (steps / speed) — an idle or
-            # work-starved replica is not a slow replica, so unused tick
-            # time never dilutes the measurement
-            self.monitor.record(
-                self.rid, self.engine.processed_tokens - processed0,
-                steps / self.itype.speed)
+            # time this step occupied — an idle replica schedules no step
+            # events, so idle time never dilutes the measurement
+            self.monitor.record(self.rid, processed, self.step_interval)
         return emitted
 
     def submit(self, req: Request):

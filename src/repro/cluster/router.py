@@ -42,7 +42,9 @@ class Router:
         self.queue = list(reqs) + self.queue
 
     def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> int:
+                 rates: Dict[int, float]) -> List[Replica]:
+        """Place queued requests; returns the replicas that received work
+        (so an event-driven cluster wakes exactly those)."""
         raise NotImplementedError
 
 
@@ -56,18 +58,19 @@ class RoundRobinRouter(Router):
         self._next = 0
 
     def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> int:
+                 rates: Dict[int, float]) -> List[Replica]:
         targets = [r for r in replicas if r.admitting]
         if not targets or not self.queue:
-            return 0
-        n = 0
+            return []
+        touched = []
         while self.queue:
             req = self.queue.pop(0)
             rep = targets[self._next % len(targets)]
             self._next += 1
             rep.submit(req)
-            n += 1
-        return n
+            if rep not in touched:
+                touched.append(rep)
+        return touched
 
 
 class RateAwareRouter(Router):
@@ -80,10 +83,10 @@ class RateAwareRouter(Router):
         self.tolerance = tolerance
 
     def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> int:
+                 rates: Dict[int, float]) -> List[Replica]:
         targets = [r for r in replicas if r.admitting]
         if not targets:
-            return 0
+            return []
         # reclaim queued-but-unadmitted work so placement can be revised
         pending: List[Request] = []
         prev_home: Dict[int, int] = {}
@@ -94,7 +97,7 @@ class RateAwareRouter(Router):
         pending.extend(self.queue)
         self.queue = []
         if not pending:
-            return 0
+            return []
 
         rate = np.asarray([max(rates.get(r.rid, 1.0), 1e-9)
                            for r in targets])
@@ -118,9 +121,13 @@ class RateAwareRouter(Router):
         res = greedy_refine(loads, len(targets), rates=rate,
                             current=current, base=base,
                             tolerance=self.tolerance)
+        touched = []
         for i, req in enumerate(pending):
-            targets[int(res.assignment[i])].submit(req)
-        return len(pending)
+            rep = targets[int(res.assignment[i])]
+            rep.submit(req)
+            if rep not in touched:
+                touched.append(rep)
+        return touched
 
 
 ROUTERS = {

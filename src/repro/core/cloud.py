@@ -23,18 +23,28 @@ Stage costs come from a ``StageCostModel`` fitted from *measured*
 checkpoint/restore/restart timings on real pytrees (benchmarks/measure.py),
 so the simulation reproduces the paper's Figures 5-8 quantitatively from
 first-principles measurements rather than assumed constants.
+
+Event plumbing lives in ``repro.runtime``: the manager registers named
+handlers on a shared :class:`~repro.runtime.EventLoop` and consumes its
+interruption schedule from a :class:`~repro.runtime.FaultTrace`, so a
+serving cluster handed the *same* trace observes the identical
+rebalance/notice/terminate timestamps.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-import heapq
 import itertools
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.runtime import EventLoop, FaultTrace, SpotEventFeed, SpotNotice
+
+__all__ = ["Mode", "Instance", "StageCostModel", "SpotEventFeed",
+           "SpotNotice", "RunReport", "CloudManager"]
 
 
 class Mode(enum.Enum):
@@ -51,14 +61,6 @@ class Instance:
     is_spot: bool = True
     state: str = "running"      # running | at_risk | doomed | terminated
     launched_at: float = 0.0
-
-
-@dataclasses.dataclass(order=True)
-class Event:
-    t: float
-    seq: int
-    kind: str = dataclasses.field(compare=False)
-    payload: dict = dataclasses.field(compare=False, default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -114,57 +116,6 @@ class StageCostModel:
         }
 
 
-# ------------------------------------------------------------------ feed
-@dataclasses.dataclass(frozen=True)
-class SpotNotice:
-    """One spot-lifecycle event delivered to a subscriber."""
-    t: float
-    kind: str       # rebalance_recommendation | interruption_notice | terminate
-    target: int     # subscriber-defined id (instance / serving replica)
-
-
-class SpotEventFeed:
-    """Deterministic spot-lifecycle event source for external subscribers.
-
-    ``CloudManager`` runs a closed-loop simulation of the *training* fleet;
-    subsystems that own their own execution loop (the serving cluster)
-    instead subscribe to this feed, which emits the same §IV lifecycle per
-    injected interruption: a *rebalance recommendation* leading the
-    2-minute *interruption notice* by ``rebalance_lead`` seconds, and the
-    *terminate* following ``notice_deadline`` seconds after the notice —
-    the AWS FIS analogue used in the paper's experiments.
-    """
-
-    def __init__(self, *, rebalance_lead: float = 180.0,
-                 notice_deadline: float = 120.0):
-        self.rebalance_lead = rebalance_lead
-        self.notice_deadline = notice_deadline
-        self._events: List[Tuple[float, int, SpotNotice]] = []
-        self._seq = itertools.count()
-
-    def _push(self, ev: SpotNotice):
-        heapq.heappush(self._events, (ev.t, next(self._seq), ev))
-
-    def inject_interruption(self, t: float, target: int):
-        """FIS analogue: schedule the full lifecycle for ``target``."""
-        self._push(SpotNotice(t, "rebalance_recommendation", target))
-        t_notice = t + self.rebalance_lead
-        self._push(SpotNotice(t_notice, "interruption_notice", target))
-        self._push(SpotNotice(t_notice + self.notice_deadline, "terminate",
-                              target))
-
-    def poll(self, now: float) -> List[SpotNotice]:
-        """Pop every event due at or before ``now``, in time order."""
-        due = []
-        while self._events and self._events[0][0] <= now:
-            due.append(heapq.heappop(self._events)[2])
-        return due
-
-    @property
-    def next_event_t(self) -> float:
-        return self._events[0][0] if self._events else math.inf
-
-
 # ------------------------------------------------------------------ manager
 @dataclasses.dataclass
 class RunReport:
@@ -180,7 +131,13 @@ class RunReport:
 
 
 class CloudManager:
-    """Monitoring task + replacement policy + rescale triggers (Fig 4)."""
+    """Monitoring task + replacement policy + rescale triggers (Fig 4).
+
+    The manager owns no event heap: it registers handlers on a
+    ``repro.runtime.EventLoop`` and receives the spot lifecycle from a
+    ``FaultTrace`` (its own by default; pass ``trace=`` to share one
+    schedule with other subsystems, e.g. a serving cluster).
+    """
 
     def __init__(self, *, n_instances: int, mode: Mode,
                  cost: StageCostModel,
@@ -190,13 +147,16 @@ class CloudManager:
                  rebalance_lead: float = 180.0,
                  iter_seconds: float = 1.0,
                  total_iters: int = 5000,
-                 seed: int = 0):
+                 seed: int = 0,
+                 trace: Optional[FaultTrace] = None):
         self.mode = mode
         self.cost = cost
         self.t_timeout = t_timeout
         self.replacement_latency = replacement_latency
-        self.notice_deadline = notice_deadline
-        self.rebalance_lead = rebalance_lead
+        self.trace = trace if trace is not None else FaultTrace(
+            rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
+        self.notice_deadline = self.trace.notice_deadline
+        self.rebalance_lead = self.trace.rebalance_lead
         self.iter_seconds = iter_seconds
         self.total_iters = total_iters
         self.target = n_instances
@@ -207,21 +167,27 @@ class CloudManager:
             (i := next(self._ids)): Instance(i, "spot.xlarge")
             for _ in range(n_instances)
         }
-        self._events: List[Event] = []
-        self._seq = itertools.count()
+        self.loop = EventLoop()
+        self.loop.register("spot", self._on_spot)
+        self.loop.register("replacement", self._on_replacement)
+        self.loop.register("timeout", self._on_timeout)
+        self.trace.bind(self.loop, kind="spot")
+        # lifecycle id -> victim iid: keyed per interruption, not per
+        # target, because a sampled trace cycles target ids and the same
+        # target can have overlapping lifecycles in flight
+        self._victim_of: Dict[int, int] = {}
+        self._fis_targets = itertools.count(10_000)
         self._oldest_rebalance: Optional[float] = None
         self._pending_replacements = 0
         self.timeline: List[Tuple[float, str]] = []
         self.rescales: List[Dict[str, float]] = []
 
     # ------------------------------------------------------------ events
-    def push(self, t: float, kind: str, **payload):
-        heapq.heappush(self._events, Event(t, next(self._seq), kind, payload))
-
     def inject_interruption(self, t: float, count: int = 1):
         """FIS analogue: at virtual time t, ``count`` running spot instances
         get a rebalance recommendation, followed by the 2-minute notice."""
-        self.push(t, "fis", count=count)
+        for _ in range(count):
+            self.trace.inject(t, next(self._fis_targets))
 
     # ------------------------------------------------------------ dynamics
     def _running(self) -> List[Instance]:
@@ -233,13 +199,12 @@ class CloudManager:
 
     def run(self) -> RunReport:
         """Simulate until the application completes ``total_iters``."""
-        t = 0.0
+        t = self.loop.now()
         work_done = 0.0
         work_total = float(self.total_iters)
         ideal = self.total_iters * self.iter_seconds
         stalled_until = 0.0
         overhead = 0.0
-        last_t = 0.0
 
         def capacity() -> float:
             if self._down:  # Mode A: a terminated rank kills the whole job
@@ -259,19 +224,17 @@ class CloudManager:
                 t_done = t_free + (work_total - work_done) / rate
             else:
                 t_done = math.inf
-            t_next = self._events[0].t if self._events else math.inf
+            t_next = self.loop.peek_t()
             if t_done <= t_next:
                 work_done = work_total
                 t = t_done
                 break
-            # progress until the event
-            ev = heapq.heappop(self._events)
-            span = max(ev.t - max(t, 0.0), 0.0)
+            # progress until the event, then dispatch its handler
             prog_start = max(t, stalled_until)
-            if ev.t > prog_start and rate > 0:
-                work_done += (ev.t - prog_start) * rate
-            t = ev.t
-            self._handle(ev, t)
+            if t_next > prog_start and rate > 0:
+                work_done += (t_next - prog_start) * rate
+            t = t_next
+            self.loop.dispatch_next()
             # handlers may stall the app (rescale downtime)
             if self._stall_pending:
                 stalled_until = max(stalled_until, t) + self._stall_pending
@@ -305,31 +268,36 @@ class CloudManager:
         self.timeline.append((t, msg))
 
     # ------------------------------------------------------------ handlers
-    def _handle(self, ev: Event, t: float):
-        if ev.kind == "fis":
+    def _on_spot(self, ev, t: float):
+        """One §IV lifecycle event from the shared ``FaultTrace``."""
+        notice: SpotNotice = ev.payload["notice"]
+        if notice.kind == "rebalance_recommendation":
             victims = [i for i in self._running() if i.state == "running"]
-            victims = victims[:ev.payload["count"]]
-            for v in victims:
-                v.state = "at_risk"
-                self._log(t, f"rebalance_recommendation i{v.iid}")
-                if self._oldest_rebalance is None:
-                    self._oldest_rebalance = t
-                    if self.mode == Mode.C_PROACTIVE:
-                        self.push(t + self.t_timeout, "timeout", started=t)
-                self.push(t + self.rebalance_lead, "notice", iid=v.iid)
+            if not victims:
+                return
+            v = victims[0]
+            self._victim_of[notice.lifecycle] = v.iid
+            v.state = "at_risk"
+            self._log(t, f"rebalance_recommendation i{v.iid}")
+            if self._oldest_rebalance is None:
+                self._oldest_rebalance = t
                 if self.mode == Mode.C_PROACTIVE:
-                    # proactively request a replacement from the pools
-                    self._pending_replacements += 1
-                    self.push(t + self.replacement_latency, "replacement")
+                    self.loop.schedule(t + self.t_timeout, "timeout",
+                                       started=t)
+            if self.mode == Mode.C_PROACTIVE:
+                # proactively request a replacement from the pools
+                self._pending_replacements += 1
+                self.loop.schedule(t + self.replacement_latency,
+                                   "replacement")
             return
 
-        if ev.kind == "notice":
-            inst = self.fleet.get(ev.payload["iid"])
-            if inst is None or inst.state == "terminated":
-                return
+        inst = self.fleet.get(self._victim_of.get(notice.lifecycle, -1))
+        if inst is None or inst.state == "terminated":
+            return
+
+        if notice.kind == "interruption_notice":
             inst.state = "doomed"
             self._log(t, f"interruption_notice i{inst.iid}")
-            self.push(t + self.notice_deadline, "terminate", iid=inst.iid)
             if self.mode == Mode.C_PROACTIVE:
                 # emergency override: rescale NOW with whatever is ready
                 self._trigger_rescale(t, reason="emergency")
@@ -338,7 +306,8 @@ class CloudManager:
                 self._do_rescale(t, reason="shrink", store="memory",
                                  drop_doomed=True)
                 self._pending_replacements += 1
-                self.push(t + self.replacement_latency, "replacement")
+                self.loop.schedule(t + self.replacement_latency,
+                                   "replacement")
             else:  # Mode A: checkpoint to FS; app dies with the instance
                 n = len(self._running())
                 ck = self.cost.checkpoint(n, "filesystem")
@@ -346,13 +315,11 @@ class CloudManager:
                 self._mark_request = True
                 self._log(t, f"fs_checkpoint {ck:.1f}s")
                 self._pending_replacements += 1
-                self.push(t + self.replacement_latency, "replacement")
+                self.loop.schedule(t + self.replacement_latency,
+                                   "replacement")
             return
 
-        if ev.kind == "terminate":
-            inst = self.fleet.get(ev.payload["iid"])
-            if inst is None or inst.state == "terminated":
-                return
+        if notice.kind == "terminate":
             inst.state = "terminated"
             self._log(t, f"terminated i{inst.iid}")
             if self.mode == Mode.A_FILESYSTEM:
@@ -364,37 +331,31 @@ class CloudManager:
                 self._maybe_fs_restart(t)
             return
 
-        if ev.kind == "replacement":
-            self._pending_replacements -= 1
-            i = next(self._ids)
-            self.fleet[i] = Instance(i, "spot.xlarge", launched_at=t)
-            self.fleet[i].state = "spare" if self.mode == Mode.C_PROACTIVE \
-                else "running"
-            self._log(t, f"replacement_launched i{i}")
-            if self.mode == Mode.C_PROACTIVE:
-                if not any(v.state == "at_risk" or v.state == "doomed"
-                           for v in self.fleet.values()
-                           if v.state in ("at_risk", "doomed")):
-                    pass
-                # complete-replacement trigger
-                n_spare = len([x for x in self.fleet.values()
-                               if x.state == "spare"])
-                if n_spare >= len(self._at_risk()) and self._at_risk():
-                    self._trigger_rescale(t, reason="complete")
-            elif self.mode == Mode.B_REACTIVE:
-                self._do_rescale(t, reason="expand", store="memory")
-            else:  # Mode A: new rank available; restart when whole
-                self._maybe_fs_restart(t)
-            return
+        raise ValueError(notice.kind)
 
-        if ev.kind == "timeout":
-            if (self._oldest_rebalance is not None
-                    and ev.payload["started"] == self._oldest_rebalance
-                    and self._at_risk()):
-                self._trigger_rescale(t, reason="timeout")
-            return
+    def _on_replacement(self, ev, t: float):
+        self._pending_replacements -= 1
+        i = next(self._ids)
+        self.fleet[i] = Instance(i, "spot.xlarge", launched_at=t)
+        self.fleet[i].state = "spare" if self.mode == Mode.C_PROACTIVE \
+            else "running"
+        self._log(t, f"replacement_launched i{i}")
+        if self.mode == Mode.C_PROACTIVE:
+            # complete-replacement trigger
+            n_spare = len([x for x in self.fleet.values()
+                           if x.state == "spare"])
+            if n_spare >= len(self._at_risk()) and self._at_risk():
+                self._trigger_rescale(t, reason="complete")
+        elif self.mode == Mode.B_REACTIVE:
+            self._do_rescale(t, reason="expand", store="memory")
+        else:  # Mode A: new rank available; restart when whole
+            self._maybe_fs_restart(t)
 
-        raise ValueError(ev.kind)
+    def _on_timeout(self, ev, t: float):
+        if (self._oldest_rebalance is not None
+                and ev.payload["started"] == self._oldest_rebalance
+                and self._at_risk()):
+            self._trigger_rescale(t, reason="timeout")
 
     def _maybe_fs_restart(self, t: float):
         """Mode A restart: needs all doomed ranks dead and full capacity."""

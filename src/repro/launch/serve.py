@@ -70,9 +70,9 @@ def run_cluster(args, cfg, params):
                         dt=1.0, seed=args.seed,
                         rebalance_lead=args.rebalance_lead,
                         notice_deadline=args.notice_deadline)
+    from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
-    for req in reqs:
-        cl.submit(req, at=0.0)
+    cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
     if args.interrupt_at is not None:
         cl.inject_interruption(t=args.interrupt_at, replica_rid=0)
     t0 = time.perf_counter()
@@ -117,6 +117,9 @@ def main():
                          "virtual time")
     ap.add_argument("--rebalance-lead", type=float, default=6.0)
     ap.add_argument("--notice-deadline", type=float, default=4.0)
+    ap.add_argument("--arrival", default="batch",
+                    help="offered load: batch | poisson:<rate> | "
+                         "trace:<file>")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]

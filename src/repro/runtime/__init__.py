@@ -1,0 +1,23 @@
+"""Shared discrete-event runtime core (the paper's ARTS substrate).
+
+One clock, one event heap, one fault schedule.  Every time-driven
+subsystem in the reproduction — the ``CloudManager`` spot simulation,
+the serving cluster's replicas, and the overdecomposed tile runtime —
+registers named handlers on a shared :class:`EventLoop` instead of
+owning a private heap, so training and serving experiments replay the
+*identical* interruption schedule from a single :class:`FaultTrace`.
+
+This is the message-driven core the paper argues for (§II): no global
+lockstep tick; each actor schedules its own next event at its own
+cadence.
+"""
+
+from repro.runtime.clock import VirtualClock
+from repro.runtime.loop import Event, EventLoop
+from repro.runtime.faults import (FaultTrace, SpotEventFeed, SpotNotice,
+                                  LIFECYCLE_KINDS)
+
+__all__ = [
+    "VirtualClock", "Event", "EventLoop",
+    "FaultTrace", "SpotEventFeed", "SpotNotice", "LIFECYCLE_KINDS",
+]

@@ -1,0 +1,177 @@
+"""One fault schedule for every subsystem (paper §IV, AWS FIS analogue).
+
+A :class:`FaultTrace` materializes an interruption schedule — injected
+explicitly, sampled from a seeded Poisson process, or read from a trace
+file — into the full §IV spot lifecycle per interruption:
+
+    rebalance_recommendation  at  t
+    interruption_notice       at  t + rebalance_lead
+    terminate                 at  t + rebalance_lead + notice_deadline
+
+Consumers attach in one of two ways:
+
+* ``trace.bind(loop, kind)`` — every lifecycle event (past and future
+  injections) is scheduled onto a shared :class:`EventLoop`; this is how
+  ``CloudManager``, ``ServingCluster``, and the tile runtime all observe
+  the *identical* timestamps from a single trace.
+* ``trace.subscribe()`` / :class:`SpotEventFeed` — a poll-style cursor
+  view for callers that drive their own time (legacy interface).
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import itertools
+import math
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotNotice:
+    """One spot-lifecycle event delivered to a subscriber."""
+    t: float
+    kind: str       # rebalance_recommendation | interruption_notice | terminate
+    target: int     # subscriber-defined id (instance / serving replica)
+    lifecycle: int = -1   # interruption index in the trace: ties the three
+                          # events of one lifecycle together even when the
+                          # same target is interrupted repeatedly
+
+
+LIFECYCLE_KINDS = ("rebalance_recommendation", "interruption_notice",
+                   "terminate")
+
+
+class FaultTrace:
+    """Seeded-or-file-driven interruption schedule -> lifecycle events."""
+
+    def __init__(self, *, rebalance_lead: float = 180.0,
+                 notice_deadline: float = 120.0):
+        self.rebalance_lead = rebalance_lead
+        self.notice_deadline = notice_deadline
+        self.interruptions: List[Tuple[float, int]] = []
+        # sorted by (t, seq): bisect keeps polls O(log n), no private heap
+        self._events: List[Tuple[float, int, SpotNotice]] = []
+        self._seq = itertools.count()
+        self._sinks: List[Tuple[object, str]] = []
+
+    # ------------------------------------------------------------ build
+    @classmethod
+    def sampled(cls, *, rate: float, horizon: float, targets: int,
+                seed: int = 0, rebalance_lead: float = 180.0,
+                notice_deadline: float = 120.0) -> "FaultTrace":
+        """Poisson(``rate``/s) interruption arrivals over ``horizon`` s,
+        cycling victims through ``targets`` ids — one seeded draw gives
+        one schedule, replayable by any number of consumers."""
+        trace = cls(rebalance_lead=rebalance_lead,
+                    notice_deadline=notice_deadline)
+        rng = np.random.default_rng(seed)
+        t, k = 0.0, 0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= horizon:
+                break
+            trace.inject(t, k % targets)
+            k += 1
+        return trace
+
+    @classmethod
+    def from_file(cls, path: str, *, rebalance_lead: float = 180.0,
+                  notice_deadline: float = 120.0) -> "FaultTrace":
+        """Trace file: one ``<t> <target>`` pair per line (# comments)."""
+        trace = cls(rebalance_lead=rebalance_lead,
+                    notice_deadline=notice_deadline)
+        with open(path) as fh:
+            for line in fh:
+                line = line.split("#", 1)[0].strip()
+                if not line:
+                    continue
+                t, target = line.split()
+                trace.inject(float(t), int(target))
+        return trace
+
+    def inject(self, t: float, target: int):
+        """FIS analogue: schedule the full lifecycle for ``target``."""
+        lc = len(self.interruptions)
+        self.interruptions.append((t, target))
+        t_notice = t + self.rebalance_lead
+        for notice in (
+                SpotNotice(t, "rebalance_recommendation", target, lc),
+                SpotNotice(t_notice, "interruption_notice", target, lc),
+                SpotNotice(t_notice + self.notice_deadline, "terminate",
+                           target, lc)):
+            seq = next(self._seq)
+            bisect.insort(self._events, (notice.t, seq, notice))
+            for loop, kind in self._sinks:
+                loop.schedule(notice.t, kind, notice=notice)
+
+    # ------------------------------------------------------------ consume
+    def events(self) -> List[SpotNotice]:
+        """Every materialized lifecycle event, time-ordered."""
+        return [n for _, _, n in self._events]
+
+    def bind(self, loop, kind: str = "spot"):
+        """Deliver all lifecycle events (incl. future injections) as
+        ``kind`` events on ``loop``; payload carries the ``notice``."""
+        self._sinks.append((loop, kind))
+        for t, _, notice in self._events:
+            loop.schedule(t, kind, notice=notice)
+
+    def subscribe(self) -> "FaultSubscription":
+        return FaultSubscription(self)
+
+
+class FaultSubscription:
+    """Per-consumer delivery cursor over a trace.
+
+    Tracks delivered events by identity (seq), not by a time watermark,
+    so a lifecycle injected *behind* an already-polled timestamp is still
+    delivered on the next poll — matching the old heap-based feed.
+    Traces are small (3 events per interruption), so the linear scan per
+    poll is irrelevant.
+    """
+
+    def __init__(self, trace: FaultTrace):
+        self.trace = trace
+        self._delivered: set = set()
+
+    def poll(self, now: float) -> List[SpotNotice]:
+        """Pop every undelivered event due at or before ``now``, in order."""
+        events = self.trace._events
+        hi = bisect.bisect_right(events, (now, math.inf))
+        due = [(seq, n) for _, seq, n in events[:hi]
+               if seq not in self._delivered]
+        self._delivered.update(seq for seq, _ in due)
+        return [n for _, n in due]
+
+    @property
+    def next_event_t(self) -> float:
+        return next((t for t, seq, _ in self.trace._events
+                     if seq not in self._delivered), math.inf)
+
+
+class SpotEventFeed:
+    """Back-compat view: the old poll-style feed, now a thin subscription
+    over a shared :class:`FaultTrace` (pass ``trace=`` to share one
+    schedule between subsystems)."""
+
+    def __init__(self, *, rebalance_lead: float = 180.0,
+                 notice_deadline: float = 120.0,
+                 trace: Optional[FaultTrace] = None):
+        self.trace = trace if trace is not None else FaultTrace(
+            rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
+        self.rebalance_lead = self.trace.rebalance_lead
+        self.notice_deadline = self.trace.notice_deadline
+        self._sub = self.trace.subscribe()
+
+    def inject_interruption(self, t: float, target: int):
+        self.trace.inject(t, target)
+
+    def poll(self, now: float) -> List[SpotNotice]:
+        return self._sub.poll(now)
+
+    @property
+    def next_event_t(self) -> float:
+        return self._sub.next_event_t

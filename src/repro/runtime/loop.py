@@ -1,0 +1,114 @@
+"""The single ordered event heap + named handlers.
+
+``EventLoop`` is the only ``heapq`` in the repository's simulation
+stack.  Subsystems register a handler per event *kind* and schedule
+events onto the shared heap; ties at equal virtual time resolve by
+schedule order (a monotone sequence number), so identical inputs give
+bit-identical dispatch order — the substrate of every determinism
+guarantee downstream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    t: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    payload: dict = dataclasses.field(compare=False, default_factory=dict)
+    cancelled: bool = dataclasses.field(compare=False, default=False)
+
+
+Handler = Callable[[Event, float], None]
+
+
+class EventLoop:
+    """Discrete-event scheduler over a shared :class:`VirtualClock`.
+
+    * ``register(kind, fn)``    — name a handler (one per kind).
+    * ``schedule(t, kind, **p)``— push an event; returns it (cancellable).
+    * ``dispatch_next()``       — pop the earliest live event, advance the
+                                  clock to its time, run its handler.
+    * ``run(until=...)``        — dispatch until the heap drains or the
+                                  next event lies beyond ``until``.
+
+    The loop journals every dispatched ``(t, seq, kind)`` so tests can
+    assert two runs produced bit-identical event timelines.
+    """
+
+    def __init__(self, clock=None):
+        from repro.runtime.clock import VirtualClock
+        self.clock = clock if clock is not None else VirtualClock()
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self._handlers: Dict[str, Handler] = {}
+        self.journal: List[Tuple[float, int, str]] = []
+
+    # ------------------------------------------------------------ wiring
+    def register(self, kind: str, handler: Handler):
+        if kind in self._handlers:
+            raise ValueError(f"handler for {kind!r} already registered")
+        self._handlers[kind] = handler
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    # ------------------------------------------------------------ heap
+    def schedule(self, t: float, kind: str, **payload) -> Event:
+        ev = Event(float(t), next(self._seq), kind, payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def cancel(self, ev: Optional[Event]):
+        if ev is not None:
+            ev.cancelled = True
+
+    def _drop_cancelled(self):
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
+
+    @property
+    def pending(self) -> int:
+        return sum(not e.cancelled for e in self._heap)
+
+    def peek_t(self) -> float:
+        """Virtual time of the earliest live event (inf when empty)."""
+        self._drop_cancelled()
+        return self._heap[0].t if self._heap else math.inf
+
+    def peek(self) -> Optional[Event]:
+        """The earliest live event without popping it (None when empty)."""
+        self._drop_cancelled()
+        return self._heap[0] if self._heap else None
+
+    # ------------------------------------------------------------ dispatch
+    def dispatch_next(self) -> Optional[Event]:
+        self._drop_cancelled()
+        if not self._heap:
+            return None
+        ev = heapq.heappop(self._heap)
+        self.clock.advance_to(ev.t)
+        self.journal.append((ev.t, ev.seq, ev.kind))
+        handler = self._handlers.get(ev.kind)
+        if handler is None:
+            raise ValueError(f"no handler registered for event {ev.kind!r}")
+        handler(ev, ev.t)
+        return ev
+
+    def run(self, until: float = math.inf, max_events: int = 10_000_000) -> int:
+        """Dispatch events with ``t <= until``; returns events dispatched."""
+        n = 0
+        while n < max_events:
+            self._drop_cancelled()
+            if not self._heap or self._heap[0].t > until:
+                break
+            self.dispatch_next()
+            n += 1
+        return n

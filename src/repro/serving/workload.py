@@ -1,8 +1,16 @@
-"""Synthetic serving workloads shared by benchmarks, tests, and CLIs."""
+"""Synthetic serving workloads shared by benchmarks, tests, and CLIs.
+
+Besides the request generator, this module defines the open-loop
+``ArrivalProcess`` family: iterables of ``(arrival_t, Request)`` that a
+``ServingCluster`` consumes one event at a time (each arrival schedules
+the next), so load is offered at a rate independent of service progress —
+in contrast to the closed-loop ``BatchArrivals`` baseline that dumps the
+whole batch at t0.
+"""
 
 from __future__ import annotations
 
-from typing import List, Tuple, Union
+from typing import Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -25,3 +33,91 @@ def synthetic_requests(n: int, vocab_size: int, *, seed: int = 0,
                                                 dtype=np.int32),
                             max_new_tokens=new))
     return reqs
+
+
+# ------------------------------------------------------------- arrivals
+class ArrivalProcess:
+    """Iterable of ``(arrival_t, Request)`` pairs, time-ordered."""
+
+    def __iter__(self) -> Iterator[Tuple[float, Request]]:
+        raise NotImplementedError
+
+
+class BatchArrivals(ArrivalProcess):
+    """Closed-loop baseline: the whole batch is submitted at ``t0``."""
+
+    def __init__(self, requests: Sequence[Request], t0: float = 0.0):
+        self.requests = list(requests)
+        self.t0 = t0
+
+    def __iter__(self):
+        for req in self.requests:
+            yield self.t0, req
+
+
+class PoissonArrivals(ArrivalProcess):
+    """Open-loop Poisson process: seeded exponential inter-arrival gaps
+    at ``rate`` requests per virtual second."""
+
+    def __init__(self, requests: Sequence[Request], rate: float, *,
+                 seed: int = 0, t0: float = 0.0):
+        if rate <= 0:
+            raise ValueError(f"poisson arrival rate must be > 0, got {rate}")
+        self.requests = list(requests)
+        self.rate = rate
+        self.seed = seed
+        self.t0 = t0
+
+    def __iter__(self):
+        rng = np.random.default_rng(self.seed)
+        t = self.t0
+        for req in self.requests:
+            t += float(rng.exponential(1.0 / self.rate))
+            yield t, req
+
+
+class TraceArrivals(ArrivalProcess):
+    """Trace-driven arrivals: explicit timestamps, one per request.
+
+    A trace shorter than the request list truncates it; extra timestamps
+    are ignored.
+    """
+
+    def __init__(self, requests: Sequence[Request],
+                 times: Sequence[float]):
+        self.requests = list(requests)
+        self.times = sorted(float(t) for t in times)
+
+    @classmethod
+    def from_file(cls, path: str,
+                  requests: Sequence[Request]) -> "TraceArrivals":
+        """Trace file: one arrival timestamp per line (# comments)."""
+        times = []
+        with open(path) as fh:
+            for line in fh:
+                line = line.split("#", 1)[0].strip()
+                if line:
+                    times.append(float(line))
+        return cls(requests, times)
+
+    def __iter__(self):
+        for t, req in zip(self.times, self.requests):
+            yield t, req
+
+
+def make_arrivals(spec: str, requests: Sequence[Request], *,
+                  seed: int = 0) -> ArrivalProcess:
+    """Build an arrival process from a CLI spec.
+
+    ``batch`` | ``poisson:<rate>`` | ``trace:<file>``
+    """
+    if spec == "batch":
+        return BatchArrivals(requests)
+    kind, _, arg = spec.partition(":")
+    if kind == "poisson" and arg:
+        return PoissonArrivals(requests, float(arg), seed=seed)
+    if kind == "trace" and arg:
+        return TraceArrivals.from_file(arg, requests)
+    raise ValueError(
+        f"unknown arrival spec {spec!r}; "
+        f"expected batch | poisson:<rate> | trace:<file>")
