@@ -12,11 +12,17 @@ Sections (run all, or pick with positional names / ``--scenario``):
   roofline            summary over artifacts/dryrun (§Roofline)
   cluster_hetero      serving cluster: rate-aware vs round-robin routing on
                       a 2-fast/2-slow fleet + a drained spot interruption
+  engine_throughput   ServingEngine A/B: chunked bulk prefill + sync-free
+                      batched decode vs the streamed per-token baseline
+
+``--json`` additionally persists each requested section's rows to
+``BENCH_<section>.json`` at the repo root (the perf trajectory).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -25,10 +31,15 @@ import numpy as np
 
 # `python benchmarks/run.py` puts benchmarks/ itself on sys.path; the
 # repo root must be there too for `from benchmarks.measure import ...`
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO_ROOT)
+
+_ROWS: list = []        # rows of the section currently running (--json)
 
 
 def row(name: str, us_per_call: float, derived: str = ""):
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -244,6 +255,105 @@ def cluster_hetero(arrival: str = "batch", quick: bool = False):
     assert wins, "rate-aware routing did not beat round-robin"
 
 
+# ------------------------------------------------------------------ engine
+def engine_throughput(quick: bool = False):
+    """ServingEngine hot-path A/B: chunked bulk prefill + sync-free
+    batched decode vs the streamed per-token baseline.
+
+    Measures (a) prefill tokens/sec for a 64-token prompt — streamed
+    feeds one prompt token per full-batch decode dispatch, chunked runs
+    one ``make_prefill`` bucket and scatters the cache columns; (b)
+    batched decode tokens/sec at decode blocks of 1 and 8 (a block-8
+    window is one dispatch and zero device->host transfers).  Generated
+    tokens must be bit-identical across modes, and chunked prefill must
+    be >= 3x streamed.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.serving.engine import Request, ServingEngine
+    from repro.serving.workload import prefill_heavy_requests
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    max_seq, prompt_len = 96, 64
+    max_new = 4 if quick else 16
+    reps = 2 if quick else 4
+
+    def engine(mode):
+        return ServingEngine(cfg, params, batch_size=4, max_seq=max_seq,
+                             prefill_mode=mode)
+
+    # warm the compile caches (shared module-level, once per mode): both
+    # prefill buckets (64-token measured prompt AND the 8-token decode
+    # workload -> bucket 16) plus the block-1 and block-8 decode loops,
+    # so no timed region below pays a jit compile
+    for mode in ("streamed", "chunked"):
+        e = engine(mode)
+        for r in prefill_heavy_requests(1, cfg.vocab_size,
+                                        prompt_len=prompt_len,
+                                        max_new=max_new, seed=99):
+            e.submit(r)
+        for r in prefill_heavy_requests(1, cfg.vocab_size, prompt_len=8,
+                                        max_new=max_new, seed=98,
+                                        start_rid=1):
+            e.submit(r)
+        while e.n_active or e.n_queued:
+            e.step()
+        e.step_many(8)
+
+    results = {}
+    for mode in ("streamed", "chunked"):
+        tps = []
+        tokens = None
+        for rep in range(reps):
+            e = engine(mode)
+            req, = prefill_heavy_requests(1, cfg.vocab_size,
+                                          prompt_len=prompt_len,
+                                          max_new=max_new, seed=rep)
+            e.submit(req)
+            t0 = time.perf_counter()
+            while e.fed_tokens(0) < prompt_len - 1:
+                e.step()        # streamed: one dispatch per prompt token
+            jax.block_until_ready(e.sample.fed)
+            tps.append((prompt_len - 1) / (time.perf_counter() - t0))
+            e.run_until_idle()
+            if rep == 0:
+                tokens = list(req.out_tokens)
+        results[mode] = {"prefill_tps": max(tps), "tokens": tokens}
+        row(f"engine_prefill_{mode}", 1e6 / max(tps),
+            f"prefill_tok_per_s={max(tps):.0f};prompt={prompt_len}")
+
+    assert results["streamed"]["tokens"] == results["chunked"]["tokens"], \
+        "chunked prefill diverged from the streamed baseline"
+    speedup = (results["chunked"]["prefill_tps"]
+               / results["streamed"]["prefill_tps"])
+    row("engine_prefill_speedup", 0.0,
+        f"chunked_over_streamed={speedup:.1f}x;identical_tokens=True")
+    assert speedup >= 3.0, \
+        f"chunked prefill only {speedup:.1f}x streamed (need >= 3x)"
+
+    # batched decode: block-1 (one dispatch + bookkeeping per step) vs
+    # block-8 (one dispatch per 8 steps, zero transfers in the window)
+    n_req = 4 if quick else 8
+    decode_new = 24 if quick else 48
+    for block in (1, 8):
+        e = engine("chunked")
+        for r in prefill_heavy_requests(n_req, cfg.vocab_size,
+                                        prompt_len=8, max_new=decode_new,
+                                        seed=5):
+            e.submit(r)
+        t0 = time.perf_counter()
+        emitted = 0
+        while e.n_active or e.n_queued:
+            emitted += e.step_many(block)["emitted"]
+        jax.block_until_ready(e.sample.fed)
+        dt = time.perf_counter() - t0
+        row(f"engine_decode_block{block}", 1e6 * dt / max(emitted, 1),
+            f"decode_tok_per_s={emitted/dt:.0f};"
+            f"host_syncs={e.host_syncs};tokens={emitted}")
+
+
 # ------------------------------------------------------------------ roofline
 def roofline():
     from repro.launch.roofline import load_table
@@ -263,7 +373,7 @@ def roofline():
 
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
-            cluster_hetero, roofline]
+            cluster_hetero, engine_throughput, roofline]
 
 
 def main() -> None:
@@ -279,6 +389,9 @@ def main() -> None:
                          "batch | poisson:<rate> | trace:<file>")
     ap.add_argument("--quick", action="store_true",
                     help="reduced problem sizes (CI smoke)")
+    ap.add_argument("--json", action="store_true",
+                    help="persist each section's rows to "
+                         "BENCH_<section>.json at the repo root")
     args = ap.parse_args()
     names = list(args.sections) + list(args.scenario)
     known = {fn.__name__ for fn in SECTIONS}
@@ -293,9 +406,20 @@ def main() -> None:
             continue
         accepted = inspect.signature(fn).parameters
         t0 = time.perf_counter()
+        _ROWS.clear()
         fn(**{k: v for k, v in opts.items() if k in accepted})
-        print(f"# section {fn.__name__} took {time.perf_counter()-t0:.1f}s",
-              flush=True)
+        elapsed = time.perf_counter() - t0
+        print(f"# section {fn.__name__} took {elapsed:.1f}s", flush=True)
+        if args.json:
+            path = os.path.join(_REPO_ROOT, f"BENCH_{fn.__name__}.json")
+            with open(path, "w") as fh:
+                json.dump({"scenario": fn.__name__,
+                           "quick": args.quick,
+                           "section_seconds": round(elapsed, 1),
+                           "unit": "us_per_call",
+                           "rows": list(_ROWS)}, fh, indent=1)
+                fh.write("\n")
+            print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

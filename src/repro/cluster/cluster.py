@@ -13,10 +13,13 @@ on one ``repro.runtime.EventLoop``:
                       by an open-loop ``ArrivalProcess`` or ``submit``);
 * ``spot``          — one §IV lifecycle event from the bound
                       ``FaultTrace`` (shareable with ``CloudManager``);
-* ``replica_step``  — ONE engine step on one replica; each replica
-                      re-schedules its own next step ``1/speed`` virtual
-                      seconds later while it has work, so a slow replica
-                      never quantizes a fast one to a global ``dt``;
+* ``replica_step``  — ``decode_block`` fused engine steps on one replica
+                      in ONE dispatch (``ServingEngine.step_many``); each
+                      replica re-schedules its own next step after the
+                      accounted cost of the batch (``decode_block/speed``
+                      + discounted bulk-prefill chunk tokens) while it
+                      has work, so a slow replica never quantizes a fast
+                      one to a global ``dt``;
 * ``replica_ready`` — a pre-warmed replacement comes up;
 * ``control``       — periodic autoscaler evaluation while work pends.
 
@@ -47,6 +50,7 @@ class ServingCluster:
                  router: Optional[Router] = None,
                  batch_size: int = 2, max_seq: int = 64,
                  temperature: float = 0.0,
+                 decode_block: int = 4, prefill_mode: str = "chunked",
                  dt: float = 1.0, seed: int = 0,
                  rebalance_lead: float = 180.0,
                  notice_deadline: float = 120.0,
@@ -57,6 +61,8 @@ class ServingCluster:
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.temperature = temperature
+        self.decode_block = max(int(decode_block), 1)
+        self.prefill_mode = prefill_mode
         self.dt = dt                  # control-plane evaluation interval
         self.seed = seed
         self.clock = VirtualClock()
@@ -92,6 +98,8 @@ class ServingCluster:
         rep = Replica(rid, self.cfg, self.params, itype,
                       batch_size=self.batch_size, max_seq=self.max_seq,
                       temperature=self.temperature,
+                      decode_block=self.decode_block,
+                      prefill_mode=self.prefill_mode,
                       monitor=self.monitor, store=self.store,
                       ready_at=ready_at, seed=self.seed)
         self.replicas.append(rep)
@@ -201,11 +209,13 @@ class ServingCluster:
         if not (rep.serving and rep.has_work()):
             return                     # drained/terminated since scheduling
         emitted = rep.step_once(t)
-        self.metrics.on_tokens(rep.rid, emitted, rep.step_interval)
+        self.metrics.on_tokens(rep.rid, emitted, rep.last_step_cost)
         for req in rep.completed:
             self.metrics.on_done(req.rid, t, len(req.out_tokens))
         rep.completed = []
-        self._kick(rep, t)
+        # the batch just run occupies [t, t + last_step_cost): the next
+        # step event lands after its accounted (per-chunk) cost
+        self._kick(rep, t, delay=rep.last_step_cost)
 
     def _on_control(self, ev, t: float):
         self._control_ev = None
@@ -213,14 +223,21 @@ class ServingCluster:
         self._dispatch(t)
 
     # ------------------------------------------------------------- driving
-    def _kick(self, rep: Replica, now: float):
-        """Schedule ``rep``'s next engine step unless one is pending."""
+    def _kick(self, rep: Replica, now: float,
+              delay: Optional[float] = None):
+        """Schedule ``rep``'s next engine step unless one is pending.
+
+        ``delay`` is the virtual cost of the batch that just ran (from
+        ``step_once``); a first kick after idle uses one step interval
+        as admission latency."""
         if rep.step_event is not None:
             return
         if not (rep.serving and rep.has_work()):
             return
+        if delay is None:
+            delay = rep.step_interval
         rep.step_event = self.loop.schedule(
-            now + rep.step_interval, "replica_step", rid=rep.rid)
+            now + delay, "replica_step", rid=rep.rid)
 
     def _dispatch(self, now: float):
         """Router pass + wake-ups; runs after any state-changing event."""

@@ -12,12 +12,16 @@ are migratable chares.  Each replica wraps an engine with
   snapshots back for re-admission elsewhere.
 
 Virtual-time pacing is *message-driven*: each replica schedules its own
-next ``replica_step`` event on the shared ``EventLoop`` at its measured
-cadence (``step_interval = 1/speed`` virtual seconds per engine step),
-so a 2x instance runs twice as many decode steps per virtual second and
-slow replicas never quantize fast ones to a global tick.  Decode itself
-is real (jitted serve_step); only the pacing is simulated, which keeps
-runs deterministic on any host.
+next ``replica_step`` event on the shared ``EventLoop``.  One event runs
+``decode_block`` fused engine steps (``ServingEngine.step_many``) in a
+single dispatch; the next event is scheduled after the *accounted* cost
+of that batch — ``decode_block / speed`` virtual seconds, plus any bulk
+prefill chunk admitted in the batch at ``prefill_discount`` of a decode
+step per chunk token (bulk prefill is cheaper per token than decode).
+A 2x instance still runs twice as many decode steps per virtual second
+and slow replicas never quantize fast ones to a global tick.  Decode
+itself is real (jitted fused decode loop); only the pacing is simulated,
+which keeps runs deterministic on any host.
 """
 
 from __future__ import annotations
@@ -53,13 +57,17 @@ class Replica:
                  max_seq: int = 64, temperature: float = 0.0,
                  monitor: Optional[RateMonitor] = None,
                  store: Optional[InMemoryStore] = None,
-                 ready_at: float = 0.0, seed: int = 0):
+                 ready_at: float = 0.0, seed: int = 0,
+                 decode_block: int = 4, prefill_mode: str = "chunked"):
         self.rid = rid
         self.itype = itype
+        self.decode_block = max(int(decode_block), 1)
         self.engine = ServingEngine(cfg, params, batch_size=batch_size,
                                     max_seq=max_seq,
                                     temperature=temperature,
-                                    seed=seed + rid)
+                                    seed=seed + rid,
+                                    prefill_mode=prefill_mode,
+                                    decode_block=self.decode_block)
         self.monitor = monitor
         self.store = store or InMemoryStore()
         self.ready_at = ready_at
@@ -68,6 +76,7 @@ class Replica:
         self.tokens_total = 0
         self.completed: List[Request] = []
         self.step_event = None       # pending replica_step on the loop
+        self.last_step_cost = 1.0 / itype.speed
 
     # ------------------------------------------------------------- status
     @property
@@ -97,22 +106,31 @@ class Replica:
             self.state = ReplicaState.RUNNING
 
     def step_once(self, now: float) -> int:
-        """Run ONE engine step (one ``replica_step`` event); returns tokens
-        emitted.  The caller schedules the next event ``step_interval``
-        later while work remains, so pacing is per-replica, not global."""
+        """Run ONE ``replica_step`` event: ``decode_block`` fused engine
+        steps in a single dispatch; returns tokens emitted.  The virtual
+        cost of the batch (decode steps at ``step_interval`` each + any
+        admitted bulk-prefill chunk at the engine's prefill discount) is
+        stored in ``last_step_cost``; the caller schedules the next event
+        that far out while work remains, so pacing is per-replica."""
         self.maybe_ready(now)
         if not self.serving:
             return 0
-        processed0 = self.engine.processed_tokens
-        emitted = self.engine.step()
+        stats = self.engine.step_many(self.decode_block)
+        emitted = stats["emitted"]
         self.tokens_total += emitted
         self.completed.extend(self.engine.pop_completed())
-        processed = self.engine.processed_tokens - processed0
-        if self.monitor is not None and processed > 0:
-            # measured work-units/sec (prefill counts) over the virtual
-            # time this step occupied — an idle replica schedules no step
-            # events, so idle time never dilutes the measurement
-            self.monitor.record(self.rid, processed, self.step_interval)
+        cost = (stats["steps"] + stats["chunk_tokens"]
+                * self.engine.prefill_discount) * self.step_interval
+        self.last_step_cost = max(cost, self.step_interval)
+        if self.monitor is not None and stats["processed"] > 0:
+            # measured work-units/sec (bulk-prefilled chunk tokens count
+            # as full work units over their discounted cost, so measured
+            # rates reflect the prefill/decode cost asymmetry) over the
+            # virtual time this batch occupied — an idle replica
+            # schedules no step events, so idle time never dilutes the
+            # measurement
+            self.monitor.record(self.rid, stats["processed"],
+                                self.last_step_cost)
         return emitted
 
     def submit(self, req: Request):

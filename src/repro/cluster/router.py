@@ -21,7 +21,8 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 from repro.core.loadbalance import greedy_refine
-from repro.serving.engine import Request
+from repro.serving.engine import (DEFAULT_PREFILL_DISCOUNT, Request,
+                                  request_cost)
 
 from repro.cluster.replica import Replica
 
@@ -78,9 +79,14 @@ class RateAwareRouter(Router):
 
     name = "rate_aware"
 
-    def __init__(self, tolerance: float = 1.05):
+    def __init__(self, tolerance: float = 1.05,
+                 prefill_discount: float = DEFAULT_PREFILL_DISCOUNT):
         super().__init__()
         self.tolerance = tolerance
+        # request load weights prompt tokens at the bulk-prefill discount
+        # (matching ServingEngine.backlog_tokens), so prompt-heavy
+        # requests don't overstate the load they will place on a replica
+        self.prefill_discount = prefill_discount
 
     def dispatch(self, replicas: List[Replica],
                  rates: Dict[int, float]) -> List[Replica]:
@@ -104,7 +110,8 @@ class RateAwareRouter(Router):
         # in-flight slots are pinned: they contribute fixed base load
         base = np.asarray([float(r.engine.backlog_tokens())
                            for r in targets])
-        loads = np.asarray([float(q.total_tokens) for q in pending])
+        loads = np.asarray([request_cost(q, self.prefill_discount)
+                            for q in pending])
 
         # earliest-finish initial placement for requests with no home yet
         scaled = base / rate

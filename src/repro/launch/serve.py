@@ -50,7 +50,9 @@ def _parse_fleet(spec: str):
 def run_single(args, cfg, params):
     engine = ServingEngine(cfg, params, batch_size=args.batch_size,
                            max_seq=args.max_seq,
-                           temperature=args.temperature, seed=args.seed)
+                           temperature=args.temperature, seed=args.seed,
+                           prefill_mode=args.prefill_mode,
+                           decode_block=args.decode_block)
     reqs = _make_requests(args, cfg)
     for req in reqs:
         engine.submit(req)
@@ -67,6 +69,8 @@ def run_cluster(args, cfg, params):
                         router=ROUTERS[args.router](),
                         batch_size=args.batch_size, max_seq=args.max_seq,
                         temperature=args.temperature,
+                        prefill_mode=args.prefill_mode,
+                        decode_block=args.decode_block,
                         dt=1.0, seed=args.seed,
                         rebalance_lead=args.rebalance_lead,
                         notice_deadline=args.notice_deadline)
@@ -105,6 +109,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=("chunked", "streamed"),
+                    help="chunked bulk prefill (bucketed make_prefill) or "
+                         "the streamed per-token baseline")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="fused decode steps per dispatch (sync-free "
+                         "window size)")
     # cluster mode
     ap.add_argument("--cluster", action="store_true",
                     help="serve over a replicated heterogeneous fleet")

@@ -431,6 +431,143 @@ def _ssm_prefill(params, batch, cfg, unroll):
                    "k": ks, "v": vs}
 
 
+# ------------------------------------------------- chunked bulk prefill
+# Families whose prefill needs only ``tokens`` (no frames / patch embeds)
+# and can therefore be bulk-prefilled by a serving engine.
+BULK_PREFILL_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+# Causal-attention families ignore a padded tail (position i never attends
+# to j > i), so a prompt chunk may be right-padded to a bucket size.
+# Recurrent families (ssm/hybrid) must never feed pad tokens through the
+# state recurrence; their chunks are always fully real.
+PAD_SAFE_FAMILIES = ("dense", "moe")
+
+
+def make_bulk_prefill(cfg: ModelConfig, shape: ShapeConfig, chunk: int):
+    """Chunked bulk prefill into one slot of a batched decode cache.
+
+    Returns ``fn(params, state, tokens, slot, n_real) -> DecodeState``:
+    runs ``make_prefill`` over a ``(1, chunk)`` token buffer and scatters
+    the resulting cache columns into row ``slot`` of ``state`` (positions
+    ``[0, chunk)`` on every ``cache_seq`` axis; whole-row replacement for
+    recurrent-state leaves), then sets ``cache_len[slot] = n_real``.
+
+    ``slot`` and ``n_real`` are traced, so one compiled function per
+    (cfg, engine shape, chunk bucket) serves every slot and prompt length
+    — the bucket list bounds the number of recompiles.
+
+    Bit-exactness: the prefill forward computes the same per-position
+    math as the streamed decode path (verified by the engine equivalence
+    tests), so a bulk-prefilled slot continues identically to one that
+    streamed its prompt one token per step.
+    """
+    pshape = ShapeConfig(f"prefill_chunk{chunk}", chunk, 1, "prefill")
+    prefill = make_prefill(cfg, pshape)
+    batch_axes = {k: ax.index("cache_batch")
+                  for k, ax in decode_state_logical_axes(cfg).cache.items()}
+
+    def bulk_prefill(params, state: DecodeState, tokens, slot, n_real):
+        _, pstate = prefill(params, {"tokens": tokens})
+        new_cache = {}
+        for key, leaf in state.cache.items():
+            upd = pstate.cache[key].astype(leaf.dtype)
+            starts = [0] * leaf.ndim
+            starts[batch_axes[key]] = slot
+            new_cache[key] = jax.lax.dynamic_update_slice(
+                leaf, upd, tuple(starts))
+        cache_len = state.cache_len.at[slot].set(
+            jnp.asarray(n_real, jnp.int32))
+        return DecodeState(new_cache, cache_len)
+
+    return bulk_prefill
+
+
+# ------------------------------------------------- sync-free decode loop
+class SampleState(NamedTuple):
+    """Device-resident continuous-batching state for the decode hot loop.
+
+    Everything the per-step control flow needs lives on device, so a
+    multi-step decode window performs zero device->host transfers; the
+    host reconciles progress from its own exact projection and fetches
+    ``out_buf`` only at completion/drain boundaries.
+    """
+    next_tok: jax.Array   # (B, 1) int32 — token each slot feeds next step
+    active: jax.Array     # (B,)  int32 — slot occupied and not finished
+    fed: jax.Array        # (B,)  int32 — prompt+generated tokens fed so far
+    plen: jax.Array       # (B,)  int32 — prompt length
+    maxfed: jax.Array     # (B,)  int32 — fed value at which the slot is done
+    out_buf: jax.Array    # (B, S) int32 — generated tokens at index fed-plen
+    rng: jax.Array        # PRNG key for device-side temperature sampling
+
+
+def init_sample_state(cfg: ModelConfig, shape: ShapeConfig,
+                      seed: int = 0) -> SampleState:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    return SampleState(
+        next_tok=jnp.zeros((B, 1), i32),
+        active=jnp.zeros((B,), i32),
+        fed=jnp.zeros((B,), i32),
+        plen=jnp.ones((B,), i32),
+        maxfed=jnp.zeros((B,), i32),
+        out_buf=jnp.zeros((B, S), i32),
+        rng=jax.random.PRNGKey(seed),
+    )
+
+
+def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
+                     temperature: float = 0.0, unroll: bool = False):
+    """Fused sample-and-advance decode: ``n_steps`` serve_steps in ONE
+    dispatch, sampling and continuous-batching bookkeeping on device.
+
+    Returns ``fn(params, DecodeState, SampleState, prompt_buf) ->
+    (DecodeState, SampleState)``.  Per inner step, each active slot feeds
+    ``next_tok``; mid-prefill slots pull their next token from
+    ``prompt_buf`` (B, S) while finished-prefill slots take the sampled
+    token, write it into ``out_buf`` and self-deactivate once ``fed``
+    reaches ``maxfed`` — no host round-trip anywhere in the loop.
+    """
+    serve_step = make_serve_step(cfg, shape, unroll=unroll)
+    B, S = shape.global_batch, shape.seq_len
+
+    def decode_loop(params, state: DecodeState, sample: SampleState,
+                    prompt_buf):
+        bidx = jnp.arange(B)
+
+        def body(carry, _):
+            state, s = carry
+            logits, state = serve_step(
+                params, state, {"tokens": s.next_tok, "active": s.active})
+            last = logits[:, -1, :]
+            rng = s.rng
+            if temperature > 0:
+                rng, sub = jax.random.split(rng)
+                sampled = jax.random.categorical(
+                    sub, last.astype(jnp.float32) / temperature, axis=-1)
+            else:
+                sampled = jnp.argmax(last, axis=-1)
+            sampled = sampled.astype(jnp.int32)
+            act = s.active > 0
+            fed2 = s.fed + s.active
+            generating = act & (fed2 >= s.plen)
+            oi = jnp.clip(fed2 - s.plen, 0, S - 1)
+            out_buf = s.out_buf.at[bidx, oi].set(
+                jnp.where(generating, sampled, s.out_buf[bidx, oi]))
+            nxt = jnp.where(fed2 < s.plen,
+                            prompt_buf[bidx, jnp.clip(fed2, 0, S - 1)],
+                            sampled)
+            next_tok = jnp.where(act[:, None], nxt[:, None], s.next_tok)
+            done = generating & (fed2 >= s.maxfed)
+            active = s.active * (1 - done.astype(jnp.int32))
+            return (state, SampleState(next_tok, active, fed2, s.plen,
+                                       s.maxfed, out_buf, rng)), ()
+
+        (state, sample), _ = jax.lax.scan(body, (state, sample), None,
+                                          length=n_steps)
+        return state, sample
+
+    return decode_loop
+
+
 # -------------------------------------------------------------- decode
 def make_serve_step(cfg: ModelConfig, shape: ShapeConfig,
                     unroll: bool = False):

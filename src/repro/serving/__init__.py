@@ -1,1 +1,3 @@
-from repro.serving.engine import Request, ServingEngine, SlotSnapshot
+from repro.serving.engine import (DEFAULT_PREFILL_BUCKETS,
+                                  DEFAULT_PREFILL_DISCOUNT, Request,
+                                  ServingEngine, SlotSnapshot, request_cost)

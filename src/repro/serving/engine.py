@@ -2,20 +2,37 @@
 
 Small but real: request queue, slot-based batching (a fixed decode batch of
 ``batch_size`` slots; finished sequences release their slot to the next
-request), streamed prefill, greedy or temperature sampling.  The decode
+request), chunked bulk prefill, greedy or temperature sampling.  The decode
 step is the same ``serve_step`` the dry run lowers at 32k/500k scale.
 
-Two properties make the engine drivable by a cluster loop (repro.cluster):
+The hot path is built around three properties:
 
-* **Non-blocking ``step()``** — every call runs exactly ONE jitted decode
-  over the whole batch.  Prefill is streamed through the same decode path,
-  one prompt token per step per admitting slot, with an ``active`` mask so
-  idle slots' caches never advance.  No call ever loops over a full prompt.
+* **Chunked bulk prefill** — a request is admitted by running
+  ``make_prefill`` over a fixed padded chunk bucket (one jitted function
+  per bucket size, bounding recompiles) and scattering the resulting
+  cache columns into the slot, instead of streaming one prompt token per
+  decode step.  A P-token prompt costs one prefill dispatch (plus a
+  streamed tail for prompts longer than the largest bucket) rather than
+  P full-batch decode dispatches.  Under greedy decoding the bulk path
+  is bit-identical to the streamed baseline (``prefill_mode="streamed"``),
+  asserted in tests; with ``temperature > 0`` the two modes consume
+  different numbers of rng splits (streaming burns one per prompt token)
+  so their samples differ.
+* **Sync-free batched decode** — ``step_many(k)`` runs k fused
+  sample-and-advance steps (``make_decode_loop``) in ONE dispatch with a
+  donated device-resident ``SampleState``: next-token feedback, the
+  active mask, per-slot progress and the generated-token buffer all stay
+  on device.  The host tracks progress with an *exact* projection (each
+  active slot advances one token per step until its precomputed
+  ``maxfed``), so steady-state decode performs **zero device->host
+  transfers**; ``out_buf`` is fetched only when the projection says a
+  slot completed, or at a drain.  ``host_syncs`` counts every fetch.
 * **Checkpointable slots** — ``snapshot_slots()`` captures each occupied
   slot (request progress + that slot's KV/state cache columns) as host
   arrays; ``restore_slots()`` admits snapshots into any engine built from
-  the same ``(cfg, max_seq)``.  This is the migration substrate for the
-  cluster's spot-instance drain (paper §IV Mode C applied to serving).
+  the same ``(cfg, max_seq)`` — including mid-prefill-chunk.  This is the
+  migration substrate for the cluster's spot-instance drain (paper §IV
+  Mode C applied to serving).
 """
 
 from __future__ import annotations
@@ -30,6 +47,17 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model_zoo as zoo
+
+# Padded prompt-chunk sizes for bulk prefill.  Ascending; buckets larger
+# than the engine's cache are dropped at construction.  One compiled
+# prefill per surviving bucket per (cfg, engine shape).
+DEFAULT_PREFILL_BUCKETS: Tuple[int, ...] = (16, 64, 256)
+
+# Relative cost of one bulk-prefilled prompt token vs one decode step.
+# Bulk prefill amortizes weight reads over the whole chunk, so a prefill
+# token is far cheaper than a decode token; the router and the cluster's
+# virtual-time accounting both use this factor.
+DEFAULT_PREFILL_DISCOUNT = 0.35
 
 
 @dataclasses.dataclass
@@ -46,6 +74,17 @@ class Request:
         return len(self.prompt) + self.max_new_tokens
 
 
+def request_cost(req: Request,
+                 discount: float = DEFAULT_PREFILL_DISCOUNT) -> float:
+    """Router load of an unstarted request, with prefill discounted.
+
+    Prompt tokens are bulk-prefilled (cheap); only the decode tokens cost
+    a full step each.  The last prompt token doubles as the first decode
+    feed, so ``len(prompt) - 1`` tokens ride the discounted prefill path.
+    """
+    return max(len(req.prompt) - 1, 0) * discount + req.max_new_tokens
+
+
 @dataclasses.dataclass
 class SlotSnapshot:
     """A checkpointed in-flight request: enough to resume decode anywhere."""
@@ -59,38 +98,86 @@ class SlotSnapshot:
     def remaining_tokens(self) -> int:
         return max(self.request.total_tokens - self.fed, 1)
 
+    def remaining_cost(self,
+                       discount: float = DEFAULT_PREFILL_DISCOUNT) -> float:
+        """Remaining load with the not-yet-fed prefill part discounted."""
+        rem = self.remaining_tokens
+        rem_prefill = min(max(len(self.request.prompt) - 1 - self.fed, 0),
+                          rem)
+        return rem_prefill * discount + (rem - rem_prefill)
 
-# One jitted serve_step per (cfg, shape): replicas in a cluster share the
-# compiled step instead of recompiling the identical graph per engine.
-_STEP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig], Any] = {}
+
+# One jitted fn per (cfg, shape[, bucket/block]): replicas in a cluster
+# share the compiled graphs instead of recompiling per engine.
+_LOOP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int, float], Any] = {}
+_PREFILL_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int], Any] = {}
 
 
-def _shared_step(cfg: ModelConfig, shape: ShapeConfig):
-    key = (cfg, shape)
-    if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = jax.jit(zoo.make_serve_step(cfg, shape))
-    return _STEP_CACHE[key]
+def _shared_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
+                 temperature: float):
+    key = (cfg, shape, n_steps, float(temperature))
+    if key not in _LOOP_CACHE:
+        _LOOP_CACHE[key] = jax.jit(
+            zoo.make_decode_loop(cfg, shape, n_steps, temperature),
+            donate_argnums=(1, 2))
+    return _LOOP_CACHE[key]
+
+
+def _shared_bulk_prefill(cfg: ModelConfig, shape: ShapeConfig, chunk: int):
+    key = (cfg, shape, chunk)
+    if key not in _PREFILL_CACHE:
+        _PREFILL_CACHE[key] = jax.jit(
+            zoo.make_bulk_prefill(cfg, shape, chunk), donate_argnums=(1,))
+    return _PREFILL_CACHE[key]
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
-                 max_seq: int = 128, temperature: float = 0.0, seed: int = 0):
+                 max_seq: int = 128, temperature: float = 0.0, seed: int = 0,
+                 prefill_mode: str = "chunked",
+                 prefill_buckets: Tuple[int, ...] = DEFAULT_PREFILL_BUCKETS,
+                 prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
+                 decode_block: int = 8):
+        if prefill_mode not in ("chunked", "streamed"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_seq = max_seq
         self.temperature = temperature
-        self.rng = jax.random.PRNGKey(seed)
+        self.prefill_mode = prefill_mode
+        self.prefill_discount = prefill_discount
+        self.decode_block = max(int(decode_block), 1)
         self.shape = ShapeConfig("serve", max_seq, batch_size, "decode")
         self.state = zoo.init_decode_state(cfg, self.shape, fill_len=0)
-        self._step = _shared_step(cfg, self.shape)
+        self.sample = zoo.init_sample_state(cfg, self.shape, seed=seed)
+        self._prompt_buf = jnp.zeros((batch_size, max_seq), jnp.int32)
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._queue: List[Request] = []
         self._restore: List[SlotSnapshot] = []
-        self._next_tok = np.zeros((batch_size, 1), np.int32)
-        self._fed = [0] * batch_size
         self._completed: List[Request] = []
+        # exact host mirrors of the device progress counters: advanced by
+        # projection after every decode window, overwritten with device
+        # truth at every poll
+        self._fed = np.zeros(batch_size, np.int64)
+        self._plen = np.ones(batch_size, np.int64)
+        self._maxfed = np.zeros(batch_size, np.int64)
+        self._next_tok_host = np.zeros(batch_size, np.int64)
+        self._out_read = np.zeros(batch_size, np.int64)
         self.processed_tokens = 0   # prefill + decode work units (rate feed)
+        self.host_syncs = 0         # device->host fetches (poll/drain only)
+        self.chunk_prefills = 0     # bulk prefill dispatches issued
+        self._chunk_tokens_pending = 0
+        if prefill_mode == "chunked" and cfg.family in zoo.BULK_PREFILL_FAMILIES:
+            self._buckets = tuple(sorted(
+                c for c in prefill_buckets if 0 < c <= max_seq))
+        else:
+            self._buckets = ()
+        if not self._buckets:
+            # no bulk path (streamed mode / family without a token-only
+            # prefill): every prompt token costs a full decode step, so
+            # backlog must not discount prefill work
+            self.prefill_discount = 1.0
         # per-leaf batch axis of the cache pytree (slot slicing/placement)
         self._cache_axes = {
             k: ax.index("cache_batch")
@@ -125,20 +212,119 @@ class ServingEngine:
     def free_slots(self) -> int:
         return self.batch - self.n_active
 
+    def fed_tokens(self, slot: int) -> int:
+        """Tokens already in ``slot``'s cache (exact, no device sync)."""
+        return int(self._fed[slot])
+
     def backlog_tokens(self) -> float:
-        """Remaining token-units across slots + queue (the router's load)."""
+        """Remaining load across slots + queue (the router's signal).
+
+        Prefill-remaining tokens are weighted by ``prefill_discount``:
+        they are bulk-prefilled in one dispatch, so counting them 1:1
+        with decode tokens would overstate the load of prompt-heavy
+        engines and mis-steer the rate-aware router.
+        """
+        d = self.prefill_discount
         load = 0.0
         for slot, req in enumerate(self._slots):
-            if req is not None:
-                load += max(req.total_tokens - self._fed[slot], 1)
-        load += sum(s.remaining_tokens for s in self._restore)
-        load += sum(r.total_tokens for r in self._queue)
+            if req is None:
+                continue
+            rem = max(int(self._maxfed[slot] - self._fed[slot]), 1)
+            rem_prefill = min(
+                max(int(self._plen[slot] - 1 - self._fed[slot]), 0), rem)
+            load += rem_prefill * d + (rem - rem_prefill)
+        load += sum(s.remaining_cost(d) for s in self._restore)
+        load += sum(request_cost(r, d) for r in self._queue)
         return load
 
+    # ------------------------------------------------------------ admission
+    def _pick_chunk(self, n_prefill: int) -> Tuple[int, int]:
+        """Bulk-prefill bucket for ``n_prefill`` prompt tokens.
+
+        Returns ``(bucket, n_real)`` — ``bucket`` = 0 means stream.
+        Pad-safe (causal attention) families take the smallest bucket
+        that covers the prompt and right-pad it; recurrent families take
+        the largest fully-real bucket so no pad token ever enters the
+        state recurrence.
+        """
+        if not self._buckets or n_prefill <= 0:
+            return 0, 0
+        if self.cfg.family in zoo.PAD_SAFE_FAMILIES:
+            for c in self._buckets:
+                if c >= n_prefill:
+                    return c, n_prefill
+            return self._buckets[-1], self._buckets[-1]
+        best = 0
+        chunk = max(self.cfg.ssm_chunk, 1)
+        for c in self._buckets:
+            if c <= n_prefill and (c <= chunk or c % chunk == 0):
+                best = c
+        return best, best
+
     def _set_cache_len(self, slot: int, value: int):
-        cl = np.array(self.state.cache_len)
-        cl[slot] = value
-        self.state = zoo.DecodeState(self.state.cache, jnp.asarray(cl))
+        self.state = zoo.DecodeState(
+            self.state.cache, self.state.cache_len.at[slot].set(value))
+
+    def _set_sample_row(self, slot: int, *, next_tok: int, fed: int,
+                        plen: int, maxfed: int, active: int = 1):
+        s = self.sample
+        self.sample = zoo.SampleState(
+            next_tok=s.next_tok.at[slot, 0].set(next_tok),
+            active=s.active.at[slot].set(active),
+            fed=s.fed.at[slot].set(fed),
+            plen=s.plen.at[slot].set(plen),
+            maxfed=s.maxfed.at[slot].set(maxfed),
+            out_buf=s.out_buf.at[slot].set(0),
+            rng=s.rng)
+        self._fed[slot] = fed
+        self._plen[slot] = plen
+        self._maxfed[slot] = maxfed
+        self._next_tok_host[slot] = next_tok
+
+    def _set_prompt_row(self, slot: int, prompt: np.ndarray):
+        row = np.zeros(self.max_seq, np.int32)
+        row[:len(prompt)] = prompt
+        self._prompt_buf = self._prompt_buf.at[slot].set(jnp.asarray(row))
+
+    def _admit_fresh(self, req: Request, slot: int):
+        P = len(req.prompt)
+        maxfed = min(P + req.max_new_tokens - 1, self.max_seq - 1)
+        self._set_prompt_row(slot, req.prompt)
+        chunk, n_real = self._pick_chunk(P - 1)
+        if chunk:
+            bulk = _shared_bulk_prefill(self.cfg, self.shape, chunk)
+            ctoks = np.zeros((1, chunk), np.int32)
+            ctoks[0, :n_real] = req.prompt[:n_real]
+            self.state = bulk(self.params, self.state, jnp.asarray(ctoks),
+                              np.int32(slot), np.int32(n_real))
+            self.chunk_prefills += 1
+            self._chunk_tokens_pending += n_real
+        else:
+            self._set_cache_len(slot, 0)
+        self._slots[slot] = req
+        self._out_read[slot] = 0
+        self._set_sample_row(slot, next_tok=int(req.prompt[n_real]),
+                             fed=n_real, plen=P, maxfed=maxfed)
+
+    def _install(self, snap: SlotSnapshot, slot: int):
+        """Write a snapshot's cache columns into ``slot`` and resume it."""
+        new_cache = {}
+        for k, arr in self.state.cache.items():
+            ax = self._cache_axes[k]
+            idx = [slice(None)] * arr.ndim
+            idx[ax] = slot
+            new_cache[k] = arr.at[tuple(idx)].set(
+                jnp.asarray(snap.cache[k], arr.dtype))
+        self.state = zoo.DecodeState(new_cache, self.state.cache_len)
+        self._set_cache_len(slot, snap.cache_len)
+        req = snap.request
+        maxfed = min(len(req.prompt) + req.max_new_tokens - 1,
+                     self.max_seq - 1)
+        self._set_prompt_row(slot, req.prompt)
+        self._slots[slot] = req
+        self._out_read[slot] = len(req.out_tokens)
+        self._set_sample_row(slot, next_tok=snap.next_tok, fed=snap.fed,
+                             plen=len(req.prompt), maxfed=maxfed)
 
     def _admit(self):
         """Fill free slots from the restore queue, then the request queue."""
@@ -148,60 +334,51 @@ class ServingEngine:
             if self._restore:
                 self._install(self._restore.pop(0), slot)
             elif self._queue:
-                req = self._queue.pop(0)
-                self._slots[slot] = req
-                self._fed[slot] = 0
-                self._next_tok[slot, 0] = req.prompt[0]
-                self._set_cache_len(slot, 0)
-
-    def _decode_all(self, tokens, active):
-        logits, self.state = self._step(self.params, self.state,
-                                        {"tokens": tokens, "active": active})
-        return logits
+                self._admit_fresh(self._queue.pop(0), slot)
 
     # ------------------------------------------------------------- stepping
-    def step(self) -> int:
-        """One engine step: admit, then ONE decode over every occupied slot.
+    def step_many(self, n_steps: int) -> Dict[str, int]:
+        """Admit, then run ``n_steps`` fused decode steps in ONE dispatch.
 
-        Slots mid-prefill consume their next prompt token; slots past
-        prefill sample and emit one new token.  Returns tokens emitted
-        (generated tokens only — prefill consumption doesn't count).
+        Returns ``{"steps", "emitted", "processed", "chunk_tokens"}``.
+        ``processed`` counts work units fed this call (bulk-prefilled
+        chunk tokens + per-step feeds); ``emitted`` counts generated
+        tokens.  Both come from the host-side exact projection — the
+        device is polled only when the projection says a slot finished.
         """
+        self._chunk_tokens_pending = 0
         self._admit()
+        chunk_tokens = self._chunk_tokens_pending
+        stats = {"steps": 0, "emitted": 0, "processed": chunk_tokens,
+                 "chunk_tokens": chunk_tokens}
         occupied = [i for i, r in enumerate(self._slots) if r is not None]
         if not occupied:
-            return 0
-        active = np.zeros((self.batch,), np.int32)
-        active[occupied] = 1
-        self.processed_tokens += len(occupied)
-        logits = self._decode_all(jnp.asarray(self._next_tok),
-                                  jnp.asarray(active))
-        last = np.asarray(logits[:, -1, :])
-        if self.temperature > 0:
-            self.rng, sub = jax.random.split(self.rng)
-            nxt = np.asarray(jax.random.categorical(
-                sub, jnp.asarray(last) / self.temperature, axis=-1))
-        else:
-            nxt = last.argmax(-1)
-        emitted = 0
-        cache_len = np.asarray(self.state.cache_len)
+            self.processed_tokens += stats["processed"]
+            return stats
+        loop = _shared_loop(self.cfg, self.shape, n_steps, self.temperature)
+        self.state, self.sample = loop(self.params, self.state, self.sample,
+                                       self._prompt_buf)
+        stats["steps"] = n_steps
+        done_any = False
         for slot in occupied:
-            req = self._slots[slot]
-            self._fed[slot] += 1
-            if self._fed[slot] < len(req.prompt):
-                # still prefilling: stream the next prompt token
-                self._next_tok[slot, 0] = req.prompt[self._fed[slot]]
-                continue
-            tok = int(nxt[slot])
-            req.out_tokens.append(tok)
-            emitted += 1
-            self._next_tok[slot, 0] = tok
-            if (len(req.out_tokens) >= req.max_new_tokens
-                    or int(cache_len[slot]) >= self.max_seq - 1):
-                req.done = True
-                self._completed.append(req)
-                self._slots[slot] = None
-        return emitted
+            before = int(self._fed[slot])
+            after = min(before + n_steps, int(self._maxfed[slot]))
+            self._fed[slot] = after
+            plen = int(self._plen[slot])
+            stats["processed"] += after - before
+            stats["emitted"] += (max(0, after - plen + 1)
+                                 - max(0, before - plen + 1))
+            if after >= self._maxfed[slot]:
+                done_any = True
+        self.processed_tokens += stats["processed"]
+        if done_any:
+            self._poll()
+        return stats
+
+    def step(self) -> int:
+        """One engine step (admit + ONE fused decode); returns tokens
+        emitted (generated tokens only — prefill doesn't count)."""
+        return self.step_many(1)["emitted"]
 
     def run_until_idle(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()
@@ -209,32 +386,71 @@ class ServingEngine:
         steps = 0
         while (any(r is not None for r in self._slots) or self._queue
                or self._restore) and steps < max_steps:
-            tokens += self.step()
-            steps += 1
+            block = min(self.decode_block, max_steps - steps)
+            out = self.step_many(block)
+            tokens += out["emitted"]
+            steps += max(out["steps"], 1)
         dt = time.perf_counter() - t0
         return {"tokens": tokens, "steps": steps, "seconds": dt,
                 "tok_per_s": tokens / max(dt, 1e-9)}
 
+    # ----------------------------------------------------------- host sync
+    def _fetch(self, tree):
+        """The ONLY device->host path in the engine (counted)."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def _poll(self):
+        """Materialize device progress into the Request objects.
+
+        Called when the projection says a slot completed, and at drains —
+        never in the steady-state decode loop.
+        """
+        occupied = [i for i, r in enumerate(self._slots) if r is not None]
+        if not occupied:
+            return
+        out_buf, fed, next_tok = self._fetch(
+            (self.sample.out_buf, self.sample.fed, self.sample.next_tok))
+        for slot in occupied:
+            req = self._slots[slot]
+            self._fed[slot] = int(fed[slot])
+            self._next_tok_host[slot] = int(next_tok[slot, 0])
+            n = max(0, int(fed[slot]) - int(self._plen[slot]) + 1)
+            new = out_buf[slot, int(self._out_read[slot]):n]
+            req.out_tokens.extend(int(t) for t in new)
+            self._out_read[slot] = n
+            if fed[slot] >= self._maxfed[slot]:
+                req.done = True
+                self._completed.append(req)
+                self._slots[slot] = None
+
     # --------------------------------------------------------- checkpointing
     def snapshot_slots(self) -> List[SlotSnapshot]:
-        """Checkpoint and release every occupied slot (drain semantics)."""
+        """Checkpoint and release every occupied slot (drain semantics).
+
+        Works at any point in a request's life — including right after a
+        bulk prefill chunk, before the prompt is fully fed.
+        """
+        self._poll()
         occupied = [i for i, r in enumerate(self._slots) if r is not None]
         if not occupied:
             return []
-        cache_host = {k: np.asarray(jax.device_get(v))
-                      for k, v in self.state.cache.items()}
-        cache_len = np.asarray(self.state.cache_len)
+        cache_host = {k: np.asarray(v)
+                      for k, v in self._fetch(self.state.cache).items()}
         snaps = []
+        deactivate = self.sample.active
         for slot in occupied:
             snaps.append(SlotSnapshot(
                 request=self._slots[slot],
-                fed=self._fed[slot],
-                next_tok=int(self._next_tok[slot, 0]),
-                cache_len=int(cache_len[slot]),
+                fed=int(self._fed[slot]),
+                next_tok=int(self._next_tok_host[slot]),
+                cache_len=int(self._fed[slot]),
                 cache={k: v.take(slot, axis=self._cache_axes[k])
                        for k, v in cache_host.items()},
             ))
             self._slots[slot] = None
+            deactivate = deactivate.at[slot].set(0)
+        self.sample = self.sample._replace(active=deactivate)
         return snaps
 
     def restore_slots(self, snapshots: List[SlotSnapshot]):
@@ -248,18 +464,3 @@ class ServingEngine:
         self._restore = []
         queued, self._queue = self._queue, []
         return snaps, queued
-
-    def _install(self, snap: SlotSnapshot, slot: int):
-        """Write a snapshot's cache columns into ``slot`` and resume it."""
-        new_cache = {}
-        for k, arr in self.state.cache.items():
-            ax = self._cache_axes[k]
-            idx = [slice(None)] * arr.ndim
-            idx[ax] = slot
-            new_cache[k] = arr.at[tuple(idx)].set(
-                jnp.asarray(snap.cache[k], arr.dtype))
-        self.state = zoo.DecodeState(new_cache, self.state.cache_len)
-        self._set_cache_len(slot, snap.cache_len)
-        self._slots[slot] = snap.request
-        self._fed[slot] = snap.fed
-        self._next_tok[slot, 0] = snap.next_tok

@@ -35,6 +35,21 @@ def synthetic_requests(n: int, vocab_size: int, *, seed: int = 0,
     return reqs
 
 
+def prefill_heavy_requests(n: int, vocab_size: int, *, prompt_len: int = 64,
+                           max_new: int = 8, seed: int = 0,
+                           start_rid: int = 0) -> List[Request]:
+    """Fixed-length long-prompt requests: the prefill-dominated workload
+    the chunked-bulk-prefill path is measured on (``engine_throughput``).
+    All prompts share one length so streamed-vs-chunked timing isolates
+    the prefill strategy, not workload variance."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid,
+                    prompt=rng.integers(0, vocab_size, prompt_len,
+                                        dtype=np.int32),
+                    max_new_tokens=max_new)
+            for rid in range(start_rid, start_rid + n)]
+
+
 # ------------------------------------------------------------- arrivals
 class ArrivalProcess:
     """Iterable of ``(arrival_t, Request)`` pairs, time-ordered."""

@@ -164,7 +164,7 @@ def test_engine_snapshot_restore_exact(model):
     e1 = ServingEngine(cfg, params, batch_size=2, max_seq=32)
     r1 = Request(rid=1, prompt=prompt.copy(), max_new_tokens=8)
     e1.submit(r1)
-    for _ in range(9):          # prompt streamed over 5 steps, then decode
+    for _ in range(4):          # prompt bulk-prefilled on admit, then decode
         e1.step()
     snaps, queued = e1.drain()
     assert len(snaps) == 1 and not queued

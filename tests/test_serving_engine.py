@@ -1,0 +1,233 @@
+"""ServingEngine hot-path tests: chunked bulk prefill + sync-free decode.
+
+The two tentpole invariants:
+
+* **Equivalence** — chunked bulk prefill (padded bucket ``make_prefill``
+  + cache-column scatter) produces bit-identical generated tokens to the
+  streamed baseline, for prompts below, at, and across bucket sizes; and
+  a slot snapshotted mid-prefill-chunk resumes to the identical
+  continuation on another engine.
+* **Sync-free decode** — steady-state ``step_many`` windows perform zero
+  device->host transfers; the host reconciles progress from its exact
+  projection and fetches only at completion/drain boundaries.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo as zoo
+from repro.serving.engine import Request, ServingEngine, request_cost
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    return cfg, params
+
+
+def _prompt(n, seed=0, vocab=200):
+    return np.random.default_rng(seed).integers(0, vocab, n, dtype=np.int32)
+
+
+def _serve(cfg, params, prompts, *, mode, max_seq=96, max_new=6,
+           single_step=False, **kw):
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=max_seq,
+                        prefill_mode=mode, **kw)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    if single_step:
+        steps = 0
+        while (eng.n_active or eng.n_queued) and steps < 10_000:
+            eng.step()
+            steps += 1
+    else:
+        eng.run_until_idle()
+    return reqs, eng
+
+
+# ------------------------------------------------------------ equivalence
+def test_chunked_prefill_bit_identical_to_streamed(model):
+    """Prompts below / at / across the bucket sizes, mixed in one batch:
+    the bulk-prefilled engine (driven by multi-step fused windows) must
+    emit exactly the streamed single-step baseline's tokens."""
+    cfg, params = model
+    lens = (2, 5, 16, 17, 40, 65)       # buckets are (16, 64) at max_seq=96
+    prompts = [_prompt(n, seed=n) for n in lens]
+    streamed, _ = _serve(cfg, params, prompts, mode="streamed",
+                         single_step=True)
+    chunked, eng = _serve(cfg, params, prompts, mode="chunked")
+    assert eng.chunk_prefills > 0
+    for a, b in zip(streamed, chunked):
+        assert a.done and b.done
+        assert a.out_tokens == b.out_tokens, (len(a.prompt), a.out_tokens,
+                                              b.out_tokens)
+
+
+def test_bulk_prefill_cache_matches_streamed_cache(model):
+    """The scattered cache columns themselves are bit-identical, not just
+    the sampled tokens (the stronger invariant behind drain migration)."""
+    cfg, params = model
+    prompt = _prompt(33, seed=7)
+    snaps = {}
+    for mode in ("streamed", "chunked"):
+        eng = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                            prefill_mode=mode)
+        req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=4)
+        eng.submit(req)
+        # stop right after the prompt is fully in the cache
+        while eng.fed_tokens(0) < len(prompt):
+            eng.step()
+        snaps[mode] = eng.drain()[0][0]
+    a, b = snaps["streamed"], snaps["chunked"]
+    assert a.fed == b.fed and a.next_tok == b.next_tok
+    for k in a.cache:
+        # positions beyond fed hold scratch (pad kv / stale columns);
+        # only [0, fed) migrates meaning
+        seq_ax = None
+        axes = zoo.decode_state_logical_axes(cfg).cache[k]
+        trimmed = [ax for ax in axes if ax != "cache_batch"]
+        if "cache_seq" in trimmed:
+            seq_ax = trimmed.index("cache_seq")
+        av, bv = a.cache[k], b.cache[k]
+        if seq_ax is not None:
+            sl = [slice(None)] * av.ndim
+            sl[seq_ax] = slice(0, a.fed)
+            av, bv = av[tuple(sl)], bv[tuple(sl)]
+        assert np.array_equal(av, bv), k
+
+
+@pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-2.7b"])
+def test_chunked_prefill_recurrent_families(arch):
+    """ssm/hybrid bulk prefill (largest fully-real bucket, no pad tokens
+    through the recurrence) matches the streamed greedy continuation."""
+    cfg = get_config(arch).reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    prompts = [_prompt(20, seed=11, vocab=cfg.vocab_size)]
+    streamed, _ = _serve(cfg, params, prompts, mode="streamed", max_seq=48)
+    chunked, eng = _serve(cfg, params, prompts, mode="chunked", max_seq=48)
+    assert eng.chunk_prefills == 1
+    assert streamed[0].out_tokens == chunked[0].out_tokens
+
+
+def test_snapshot_mid_prefill_chunk_resumes_identically(model):
+    """Drain a slot right after its bulk prefill chunk, before the prompt
+    is fully fed; the restored continuation must match an uninterrupted
+    run bit-for-bit."""
+    cfg, params = model
+    prompt = _prompt(40, seed=9)        # buckets (16,): chunk 16, tail 23
+    ref, _ = _serve(cfg, params, [prompt], mode="chunked", max_new=8)
+
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                        prefill_mode="chunked", prefill_buckets=(16,))
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    eng.submit(req)
+    eng.step()                          # admit: bulk chunk of 16 + 1 step
+    assert eng.chunk_prefills == 1
+    assert eng.fed_tokens(0) < len(prompt) - 1     # still mid-prefill
+    snaps, queued = eng.drain()
+    assert len(snaps) == 1 and not queued
+    assert snaps[0].fed < len(prompt)   # checkpointed mid-prompt
+    assert req.out_tokens == []
+
+    other = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                          prefill_mode="chunked")
+    other.restore_slots(snaps)
+    other.run_until_idle()
+    assert req.done
+    assert req.out_tokens == ref[0].out_tokens
+
+
+# ------------------------------------------------------------- sync-free
+def test_steady_state_decode_is_sync_free(model, monkeypatch):
+    """Mid-generation ``step_many`` windows must perform zero
+    device->host transfers; fetches happen only at completion/drain."""
+    cfg, params = model
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=_prompt(10, seed=i),
+                           max_new_tokens=60))
+    eng.step()                  # admit + first token: prefill boundary
+    assert all(eng.fed_tokens(s) >= eng._plen[s] for s in range(2))
+
+    fetches = []
+    real_device_get = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda tree: fetches.append(1) or
+                        real_device_get(tree))
+    syncs0 = eng.host_syncs
+    emitted = 0
+    for _ in range(6):          # 48 decode steps, nobody completes
+        emitted += eng.step_many(8)["emitted"]
+    assert emitted == 96
+    assert fetches == [], "steady-state decode touched the host"
+    assert eng.host_syncs == syncs0
+    monkeypatch.undo()
+
+    eng.run_until_idle()        # completion boundary: one poll happens
+    assert eng.host_syncs > syncs0
+    for req in eng.pop_completed():
+        assert len(req.out_tokens) == 60
+
+
+def test_host_projection_matches_device(model):
+    """The host-side progress projection (used for backlog and completion
+    detection without syncing) agrees exactly with device truth."""
+    cfg, params = model
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    eng.submit(Request(rid=0, prompt=_prompt(20, seed=3),
+                       max_new_tokens=30))
+    eng.submit(Request(rid=1, prompt=_prompt(4, seed=4),
+                       max_new_tokens=10))
+    for _ in range(4):
+        eng.step_many(5)
+        dev_fed = np.asarray(jax.device_get(eng.sample.fed))
+        for slot, req in enumerate(eng._slots):
+            if req is not None:
+                assert eng.fed_tokens(slot) == int(dev_fed[slot])
+
+
+# ---------------------------------------------------------- load signals
+def test_backlog_discounts_prefill_tokens(model):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    long_prompt = Request(rid=0, prompt=_prompt(60, seed=1),
+                          max_new_tokens=4)
+    eng.submit(long_prompt)
+    undiscounted = long_prompt.total_tokens
+    assert eng.backlog_tokens() < undiscounted
+    assert eng.backlog_tokens() == pytest.approx(
+        request_cost(long_prompt, eng.prefill_discount))
+    # decode-heavy work is NOT discounted
+    decode_heavy = Request(rid=1, prompt=_prompt(2, seed=2),
+                           max_new_tokens=40)
+    assert request_cost(decode_heavy) > 40
+    # a streamed engine pays full decode cost per prompt token, so its
+    # backlog must not discount prefill work
+    streamed = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                             prefill_mode="streamed")
+    assert streamed.prefill_discount == 1.0
+    streamed.submit(Request(rid=2, prompt=_prompt(60, seed=1),
+                            max_new_tokens=4))
+    assert streamed.backlog_tokens() == pytest.approx(60 - 1 + 4)
+
+
+def test_bucket_selection(model):
+    cfg, params = model
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    assert eng._buckets == (16, 64)     # 256 exceeds the cache
+    assert eng._pick_chunk(0) == (0, 0)
+    assert eng._pick_chunk(7) == (16, 7)       # padded up
+    assert eng._pick_chunk(16) == (16, 16)
+    assert eng._pick_chunk(40) == (64, 40)     # padded up
+    assert eng._pick_chunk(80) == (64, 64)     # largest bucket + tail
+    ssm = get_config("mamba2-780m").reduced()
+    sp = zoo.init_state(ssm, jax.random.PRNGKey(0)).params
+    es = ServingEngine(ssm, sp, batch_size=2, max_seq=96)
+    assert es._pick_chunk(7) == (0, 0)         # no pads: stream short
+    assert es._pick_chunk(40) == (16, 16)      # largest fully-real bucket
+    assert es._pick_chunk(70) == (64, 64)
