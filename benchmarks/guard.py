@@ -1,0 +1,53 @@
+"""Perf-trajectory guard: fail CI when a persisted BENCH_*.json regresses.
+
+Currently guards the engine hot path: the chunked-bulk-prefill speedup
+over the streamed baseline (the ``engine_prefill_speedup`` row written by
+``benchmarks/run.py --scenario engine_throughput --json``) must stay at
+or above ``--min-speedup``.
+
+Usage:
+  python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def prefill_speedup(bench: dict) -> float:
+    """Extract chunked-over-streamed speedup from an engine_throughput
+    benchmark dump (derived field ``chunked_over_streamed=<X>x``)."""
+    for r in bench.get("rows", []):
+        if r.get("name") == "engine_prefill_speedup":
+            m = re.search(r"chunked_over_streamed=([0-9.]+)x",
+                          r.get("derived", ""))
+            if m:
+                return float(m.group(1))
+    raise SystemExit("guard: no engine_prefill_speedup row in the dump "
+                     "(run benchmarks/run.py --scenario engine_throughput "
+                     "--json first)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json",
+                    help="path to BENCH_engine_throughput.json")
+    ap.add_argument("--min-speedup", type=float, default=3.0,
+                    help="minimum chunked/streamed prefill speedup")
+    args = ap.parse_args()
+    with open(args.bench_json) as fh:
+        bench = json.load(fh)
+    speedup = prefill_speedup(bench)
+    if speedup < args.min_speedup:
+        print(f"guard: FAIL — chunked prefill speedup {speedup:.1f}x "
+              f"regressed below {args.min_speedup:.1f}x", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"guard: OK — chunked prefill speedup {speedup:.1f}x "
+          f">= {args.min_speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

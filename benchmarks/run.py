@@ -12,6 +12,9 @@ Sections (run all, or pick with positional names / ``--scenario``):
   roofline            summary over artifacts/dryrun (§Roofline)
   cluster_hetero      serving cluster: rate-aware vs round-robin routing on
                       a 2-fast/2-slow fleet + a drained spot interruption
+  cluster_slo         SLO layer A/B: priority admission + deadline routing +
+                      mid-stream migration vs FIFO rate-aware, Poisson
+                      interactive/batch mix + a drained spot interruption
   engine_throughput   ServingEngine A/B: chunked bulk prefill + sync-free
                       batched decode vs the streamed per-token baseline
 
@@ -255,6 +258,104 @@ def cluster_hetero(arrival: str = "batch", quick: bool = False):
     assert wins, "rate-aware routing did not beat round-robin"
 
 
+# ------------------------------------------------------------------ SLOs
+def cluster_slo(quick: bool = False):
+    """SLO scheduling A/B (the elastic-scheduler deadline layer on top of
+    §III rate-aware balancing).
+
+    The same 2-fast/2-slow fleet serves an identical seeded Poisson mix
+    of interactive (tight deadline) and batch (loose deadline,
+    lazily-admitted) requests, with the same injected spot interruption:
+
+    * FIFO      — ``RateAwareRouter``, FIFO admission, no rebalancer
+                  (PR-1 behaviour);
+    * SLO-aware — ``DeadlineAwareRouter`` (GreedyRefine + predicted-miss
+                  repair), priority admission (batch held until backlog
+                  headroom), and the recurring mid-stream migration pass.
+
+    SLO-aware scheduling must strictly improve interactive-class deadline
+    attainment AND interactive p99 latency, drop nothing, and — because
+    greedy decode is placement/migration-independent — emit bit-identical
+    per-request tokens to the FIFO run.
+    """
+    import jax
+    from repro.cluster import (DeadlineAwareRouter, InstanceType,
+                               RateAwareRouter, ServingCluster)
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.runtime import FaultTrace
+    from repro.serving.workload import (PoissonArrivals, SLOClass,
+                                        classed_requests)
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    fleet = [InstanceType("fast.2x", 2.0), InstanceType("fast.2x", 2.0),
+             InstanceType("slow.1x", 0.7), InstanceType("slow.1x", 0.7)]
+    interactive = SLOClass("interactive", 0, deadline=12.0)
+    batch = SLOClass("batch", 2, deadline=400.0, admit_lazily=True)
+    n_requests, rate = (18, 2.5) if quick else (36, 2.0)
+
+    def one_run(slo_aware: bool):
+        trace = FaultTrace(rebalance_lead=6.0, notice_deadline=4.0)
+        trace.inject(4.0, 0)
+        kw = dict(dt=1.0, batch_size=2, max_seq=48, trace=trace)
+        if slo_aware:
+            cl = ServingCluster(cfg, params, fleet,
+                                router=DeadlineAwareRouter(),
+                                admission="priority",
+                                batch_admit_headroom=24.0,
+                                rebalance_interval=2.0, **kw)
+        else:
+            cl = ServingCluster(cfg, params, fleet,
+                                router=RateAwareRouter(), **kw)
+        reqs = classed_requests(n_requests, cfg.vocab_size,
+                                interactive_frac=0.5, seed=0,
+                                interactive=interactive, batch=batch)
+        cl.attach_arrivals(PoissonArrivals(reqs, rate, seed=0))
+        out = cl.run(max_time=10_000)
+        return cl, reqs, out
+
+    results = {}
+    for tag, slo_aware in (("fifo", False), ("slo_aware", True)):
+        cl, reqs, out = one_run(slo_aware)
+        results[tag] = (reqs, out)
+        row(f"cluster_slo_{tag}_interactive_p99",
+            out["p99_latency_interactive"] * 1e6,
+            f"attainment={out['attainment_interactive']:.3f};"
+            f"virtual_s={out['p99_latency_interactive']:.1f}")
+        row(f"cluster_slo_{tag}_batch",
+            out["p99_latency_batch"] * 1e6,
+            f"attainment={out['attainment_batch']:.3f}")
+        row(f"cluster_slo_{tag}_fleet", 0.0,
+            f"tok_per_s={out['tok_per_s']:.2f};dropped={out['dropped']};"
+            f"migrated={out['migrated_slots']};"
+            f"rebalance_migrations={out['rebalance_migrations']}")
+        assert out["dropped"] == 0, f"{tag}: dropped requests"
+        assert out["completed"] == n_requests, f"{tag}: incomplete run"
+
+    (fifo_reqs, fifo), (slo_reqs, slo) = (results["fifo"],
+                                          results["slo_aware"])
+    for a, b in zip(fifo_reqs, slo_reqs):
+        assert a.out_tokens == b.out_tokens, \
+            f"req{a.rid}: SLO scheduling changed decoded tokens"
+    att_f = fifo["attainment_interactive"]
+    att_s = slo["attainment_interactive"]
+    p99_f = fifo["p99_latency_interactive"]
+    p99_s = slo["p99_latency_interactive"]
+    wins = att_s > att_f and p99_s < p99_f
+    row("cluster_slo_summary", 0.0,
+        f"slo_beats_fifo={wins};"
+        f"attainment={att_s:.3f}vs{att_f:.3f};"
+        f"p99_interactive={p99_s:.1f}vs{p99_f:.1f};"
+        f"identical_tokens=True;"
+        f"migrations={slo['rebalance_migrations']}")
+    assert wins, (
+        f"SLO-aware did not strictly improve interactive attainment/p99: "
+        f"{att_s:.3f} vs {att_f:.3f}, {p99_s:.1f} vs {p99_f:.1f}")
+    assert slo["rebalance_migrations"] > 0, \
+        "the mid-stream rebalancer never migrated a slot"
+
+
 # ------------------------------------------------------------------ engine
 def engine_throughput(quick: bool = False):
     """ServingEngine hot-path A/B: chunked bulk prefill + sync-free
@@ -373,7 +474,7 @@ def roofline():
 
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
-            cluster_hetero, engine_throughput, roofline]
+            cluster_hetero, cluster_slo, engine_throughput, roofline]
 
 
 def main() -> None:

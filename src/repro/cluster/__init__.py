@@ -1,12 +1,14 @@
 """Cloud-native serving cluster (paper §III/§IV applied to serving).
 
-Replicated ``ServingEngine``s behind a rate-aware router, with elastic
-autoscaling and proactive spot-interruption drain.
+Replicated ``ServingEngine``s behind a rate-aware (optionally
+SLO/deadline-aware) router, with per-model pools, priority admission,
+mid-stream slot migration, elastic autoscaling and proactive
+spot-interruption drain.
 """
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.cluster import ServingCluster
 from repro.cluster.metrics import ClusterMetrics, VirtualClock
 from repro.cluster.replica import InstanceType, Replica, ReplicaState
-from repro.cluster.router import (RateAwareRouter, RoundRobinRouter, Router,
-                                  ROUTERS)
+from repro.cluster.router import (DeadlineAwareRouter, RateAwareRouter,
+                                  RoundRobinRouter, Router, ROUTERS)

@@ -11,15 +11,16 @@ Subscribes to two signal sources:
   slot is checkpointed (via ``InMemoryStore``) and re-admitted onto the
   healthiest surviving replicas; queued requests go back to the router.
   Zero requests are dropped and no decoded token is recomputed.
-* Load — backlog-per-replica thresholds grow and shrink the fleet
+* Load + SLOs — thresholds grow and shrink the fleet **per model pool**
   (the elastic-job-scheduler behaviour of Bhosale & Kale, applied to
-  serving): sustained backlog launches a replica; a sustained-idle
-  surplus replica is drained (losslessly) and retired.
+  serving): sustained backlog OR decided deadline misses (overdue live
+  requests of any SLO class) launches a replica into that pool; a
+  sustained-idle surplus replica is drained (losslessly) and retired.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.core.cloud import SpotNotice
 
@@ -34,6 +35,7 @@ class Autoscaler:
                  scale_down_idle: float = 120.0,
                  min_replicas: int = 1,
                  max_replicas: int = 8,
+                 slo_scale_up: bool = True,
                  default_itype: Optional[InstanceType] = None):
         self.cluster = cluster
         self.replacement_latency = replacement_latency
@@ -42,9 +44,11 @@ class Autoscaler:
         self.scale_down_idle = scale_down_idle
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
+        self.slo_scale_up = slo_scale_up
         self.default_itype = default_itype
-        self._over_since: Optional[float] = None
-        self._idle_since: Optional[float] = None
+        # per-model-pool hysteresis timers
+        self._over_since: Dict[str, float] = {}
+        self._idle_since: Dict[str, float] = {}
 
     # ------------------------------------------------------------- events
     def handle_spot(self, ev: SpotNotice, now: float):
@@ -71,6 +75,9 @@ class Autoscaler:
         self.cluster.loop.cancel(rep.step_event)   # no step after the drain
         rep.step_event = None
         snaps, queued, (ckpt_s, restore_s) = rep.drain()
+        # the drain's snapshot poll may discover just-finished slots: they
+        # complete here, not migrate (the replica never steps again)
+        self.cluster._harvest(rep, now)
         metrics = self.cluster.metrics
         metrics.drains.append(DrainRecord(
             t=now, replica=rep.rid, slots_migrated=len(snaps),
@@ -86,41 +93,61 @@ class Autoscaler:
 
     # ------------------------------------------------------------- load
     def tick(self, now: float):
+        """Evaluate every model pool independently: replicas, backlog,
+        and SLO pressure never leak across pools."""
         cl = self.cluster
-        serving = [r for r in cl.replicas if r.serving]
+        for model_id in sorted({r.model_id for r in cl.replicas}):
+            self._tick_pool(model_id, now)
+
+    def _tick_pool(self, model_id: str, now: float):
+        cl = self.cluster
+        serving = [r for r in cl.replicas
+                   if r.serving and r.model_id == model_id]
         launching = [r for r in cl.replicas
-                     if r.state == ReplicaState.LAUNCHING]
+                     if r.state == ReplicaState.LAUNCHING
+                     and r.model_id == model_id]
         if not serving:
             return
         backlog = sum(r.backlog_tokens() for r in serving) \
-            + sum(q.total_tokens for q in cl.router.queue)
+            + sum(q.total_tokens for q in cl.router.queue
+                  if q.model_id == model_id) \
+            + sum(q.total_tokens for q in cl._held
+                  if q.model_id == model_id)
         per_replica = backlog / max(len(serving) + len(launching), 1)
+        # SLO pressure: live requests already past their deadline are
+        # decided misses — the pool is under-provisioned for that class
+        overdue = (sum(cl.metrics.overdue(now, model_id=model_id).values())
+                   if self.slo_scale_up else 0)
 
-        # scale up on sustained backlog
-        if per_replica > self.scale_up_backlog:
-            if self._over_since is None:
-                self._over_since = now
-            elif (now - self._over_since >= self.scale_up_patience
+        # scale up on sustained backlog or sustained deadline pressure
+        if per_replica > self.scale_up_backlog or overdue > 0:
+            if model_id not in self._over_since:
+                self._over_since[model_id] = now
+            elif (now - self._over_since[model_id] >= self.scale_up_patience
                     and len(serving) + len(launching) < self.max_replicas):
                 itype = self.default_itype or serving[0].itype
+                if itype.model_id != model_id:
+                    itype = serving[0].itype
                 new = cl.launch(itype,
                                 ready_at=now + self.replacement_latency)
+                why = (f"overdue={overdue}" if overdue
+                       else f"backlog/replica={per_replica:.0f}")
                 cl.log(now, f"scale_up r{new.rid} ({itype.name}) "
-                            f"backlog/replica={per_replica:.0f}")
-                self._over_since = None
+                            f"pool={model_id} {why}")
+                del self._over_since[model_id]
         else:
-            self._over_since = None
+            self._over_since.pop(model_id, None)
 
         # scale down a surplus replica after a sustained idle window
         if backlog == 0 and not launching and len(serving) > self.min_replicas:
-            if self._idle_since is None:
-                self._idle_since = now
-            elif now - self._idle_since >= self.scale_down_idle:
+            if model_id not in self._idle_since:
+                self._idle_since[model_id] = now
+            elif now - self._idle_since[model_id] >= self.scale_down_idle:
                 victim = min(serving,
                              key=lambda r: cl.rates().get(r.rid, 1.0))
                 self.drain(victim, now)
                 victim.terminate()
-                cl.log(now, f"scale_down r{victim.rid}")
-                self._idle_since = None
+                cl.log(now, f"scale_down r{victim.rid} pool={model_id}")
+                del self._idle_since[model_id]
         else:
-            self._idle_since = None
+            self._idle_since.pop(model_id, None)

@@ -21,7 +21,20 @@ on one ``repro.runtime.EventLoop``:
                       has work, so a slow replica never quantizes a fast
                       one to a global ``dt``;
 * ``replica_ready`` — a pre-warmed replacement comes up;
-* ``control``       — periodic autoscaler evaluation while work pends.
+* ``control``       — periodic autoscaler evaluation while work pends;
+* ``rebalance``     — periodic mid-stream migration pass: in-flight
+                      slots move from overloaded/slow replicas to
+                      underloaded ones through the engine's
+                      ``snapshot_slots``/``restore_slots`` path (the
+                      Charm++ migratable-chare move, exploited
+                      *proactively* for load — not just at spot-drain).
+
+The SLO layer rides these events: requests carry an ``SLOClass``
+(deadline + priority); under ``admission="priority"`` latency-sensitive
+classes queue-jump while ``admit_lazily`` (batch) classes are held at
+arrival until the fleet has backlog headroom; the ``DeadlineAwareRouter``
+places by predicted deadline misses.  Replicas belong to per-model pools
+(``InstanceType.model_id``) and routing/migration never crosses pools.
 
 All policy decisions consume *measured* rates from the shared
 ``RateMonitor`` — never the InstanceType ground truth.
@@ -30,13 +43,15 @@ All policy decisions consume *measured* rates from the shared
 from __future__ import annotations
 
 import itertools
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
 from repro.core.rates import RateMonitor
 from repro.runtime import EventLoop, FaultTrace, VirtualClock
-from repro.serving.engine import Request, SlotSnapshot
+from repro.serving.engine import Request, SlotSnapshot, request_cost
+from repro.serving.workload import STANDARD, SLOClass
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.metrics import ClusterMetrics
@@ -55,9 +70,26 @@ class ServingCluster:
                  rebalance_lead: float = 180.0,
                  notice_deadline: float = 120.0,
                  trace: Optional[FaultTrace] = None,
-                 autoscaler_kw: Optional[dict] = None):
+                 autoscaler_kw: Optional[dict] = None,
+                 models: Optional[Dict[str, Tuple[ModelConfig,
+                                                  object]]] = None,
+                 admission: str = "fifo",
+                 batch_admit_headroom: float = 64.0,
+                 default_slo: SLOClass = STANDARD,
+                 rebalance_interval: Optional[float] = None,
+                 rebalance_ratio: float = 1.75):
+        if admission not in ("fifo", "priority"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
         self.params = params
+        # multi-model fleets: model_id -> (cfg, params); instances whose
+        # model_id is absent fall back to the default (cfg, params) pool
+        self.models = dict(models or {})
+        self.admission = admission
+        self.batch_admit_headroom = batch_admit_headroom
+        self.default_slo = default_slo
+        self.rebalance_interval = rebalance_interval
+        self.rebalance_ratio = rebalance_ratio
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.temperature = temperature
@@ -82,20 +114,28 @@ class ServingCluster:
         self.loop.register("replica_ready", self._on_replica_ready)
         self.loop.register("control", self._on_control)
         self.loop.register("dispatch", self._on_dispatch)
+        self.loop.register("rebalance", self._on_rebalance)
         self.faults.bind(self.loop, kind="spot")
         self.replicas: List[Replica] = []
         for itype in fleet:
             self.launch(itype, ready_at=0.0)
         self._control_ev = None
         self._dispatch_ev = None
+        self._rebalance_ev = None
         self._parked: List[SlotSnapshot] = []
+        self._held: List[Request] = []   # lazily-admitted (batch) arrivals
+        self._completion_hooks: List[Callable] = []
 
     # ------------------------------------------------------------- fleet
+    def model_for(self, model_id: str) -> Tuple[ModelConfig, object]:
+        return self.models.get(model_id, (self.cfg, self.params))
+
     def launch(self, itype: InstanceType, *, ready_at: float) -> Replica:
         rid = next(self._rid)
         if rid >= self.monitor.n_pes:
             self.monitor.resize(rid + 1)
-        rep = Replica(rid, self.cfg, self.params, itype,
+        mcfg, mparams = self.model_for(itype.model_id)
+        rep = Replica(rid, mcfg, mparams, itype,
                       batch_size=self.batch_size, max_seq=self.max_seq,
                       temperature=self.temperature,
                       decode_block=self.decode_block,
@@ -128,21 +168,26 @@ class ServingCluster:
         """
         if not snaps:
             return True
-        survivors = [r for r in self.replicas if r.admitting]
-        if not survivors:
-            self._parked.extend(snaps)
-            return False
         rates = self.rates()
 
         def key(r):
             return r.engine.backlog_tokens() / max(rates.get(r.rid, 1.0),
                                                    1e-9)
+        all_placed = True
         for s in snaps:
+            # placement never crosses model pools: a snapshot only fits
+            # an engine built from the same (cfg, max_seq)
+            survivors = [r for r in self.replicas if r.admitting
+                         and r.model_id == s.request.model_id]
+            if not survivors:
+                self._parked.append(s)
+                all_placed = False
+                continue
             tgt = min(survivors, key=key)
             tgt.restore([s])
             self._kick(tgt, now)
             self.log(now, f"readmit req{s.request.rid} -> r{tgt.rid}")
-        return True
+        return all_placed
 
     def log(self, t: float, msg: str):
         self.timeline.append((t, msg))
@@ -163,14 +208,37 @@ class ServingCluster:
             self.loop.schedule(at, "arrival", request=req, source=it)
             return
 
+    def attach_closed_loop(self, proc):
+        """Closed-loop offered load (``ClosedLoopThinkTime``): the first
+        ``n_users`` arrivals are scheduled now; every completion re-arms
+        the next one after the process's think time."""
+        self._completion_hooks.append(proc.on_complete)
+        for at, req in proc.initial():
+            self.loop.schedule(at, "arrival", request=req)
+
     def inject_interruption(self, t: float, replica_rid: int):
         self.faults.inject(t, replica_rid)
 
     # ------------------------------------------------------------- handlers
     def _on_arrival(self, ev, t: float):
         req: Request = ev.payload["request"]
-        self.router.submit(req)
-        self.metrics.on_submit(req.rid, t)
+        if req.slo is None:
+            req.slo = self.default_slo
+        req.arrival_t = t
+        self.metrics.on_submit(req.rid, t, slo=req.slo.name,
+                               deadline_t=req.deadline_t(),
+                               model_id=req.model_id)
+        # priority admission: lazily-admitted classes (batch) wait at the
+        # door until the fleet has backlog headroom, so they never crowd
+        # out latency-sensitive work; everyone else enters the router
+        # queue, where an SLO-aware router lets interactive requests
+        # queue-jump by (priority, deadline) order
+        if (self.admission == "priority" and req.slo.admit_lazily
+                and not self._admit_headroom(req.model_id)):
+            self._held.append(req)
+            self.log(t, f"hold req{req.rid} ({req.slo.name}: no headroom)")
+        else:
+            self.router.submit(req)
         source = ev.payload.get("source")
         if source is not None:
             self._schedule_next_arrival(source)
@@ -210,16 +278,37 @@ class ServingCluster:
             return                     # drained/terminated since scheduling
         emitted = rep.step_once(t)
         self.metrics.on_tokens(rep.rid, emitted, rep.last_step_cost)
-        for req in rep.completed:
-            self.metrics.on_done(req.rid, t, len(req.out_tokens))
-        rep.completed = []
+        done = self._harvest(rep, t)
         # the batch just run occupies [t, t + last_step_cost): the next
         # step event lands after its accounted (per-chunk) cost
         self._kick(rep, t, delay=rep.last_step_cost)
+        if done:
+            self._dispatch(t)   # headroom may have opened for held work
+
+    def _harvest(self, rep: Replica, t: float) -> List[Request]:
+        """Collect completed requests from a replica: record metrics and
+        fire completion hooks (closed-loop arrival re-arming).  Called
+        after step events AND after any snapshot path that can complete a
+        slot mid-poll (drain, rebalance migration)."""
+        done = rep.completed + rep.engine.pop_completed()
+        rep.completed = []
+        for req in done:
+            self.metrics.on_done(req.rid, t, len(req.out_tokens))
+            for hook in self._completion_hooks:
+                nxt = hook(req, t)
+                if nxt is not None:
+                    at, nreq = nxt
+                    self.loop.schedule(max(at, t), "arrival", request=nreq)
+        return done
 
     def _on_control(self, ev, t: float):
         self._control_ev = None
         self.autoscaler.tick(t)
+        self._dispatch(t)
+
+    def _on_rebalance(self, ev, t: float):
+        self._rebalance_ev = None
+        self._rebalance_pass(t)
         self._dispatch(t)
 
     # ------------------------------------------------------------- driving
@@ -242,16 +331,30 @@ class ServingCluster:
     def _dispatch(self, now: float):
         """Router pass + wake-ups; runs after any state-changing event."""
         self._unpark(now)
-        for rep in self.router.dispatch(self.replicas, self.rates()):
+        self._admit_held(now)
+        for rep in self.router.dispatch(self.replicas, self.rates(), now):
             self._kick(rep, now)
         self._ensure_control(now)
+        self._ensure_rebalance(now)
 
     def _ensure_control(self, now: float):
         if self._control_ev is None and self._pending_work():
             self._control_ev = self.loop.schedule(now + self.dt, "control")
 
+    def _ensure_rebalance(self, now: float):
+        """Keep the recurring mid-stream-migration pass alive while any
+        replica holds in-flight slots (queue-only backlog is the
+        router's job, not the rebalancer's)."""
+        if (self.rebalance_interval is not None
+                and self._rebalance_ev is None
+                and any(r.serving and r.engine.n_active
+                        for r in self.replicas)):
+            self._rebalance_ev = self.loop.schedule(
+                now + self.rebalance_interval, "rebalance")
+
     def _pending_work(self) -> bool:
         return (bool(self.router.queue) or bool(self._parked)
+                or bool(self._held)
                 or any(r.serving and r.has_work() for r in self.replicas))
 
     def _unpark(self, now: float):
@@ -259,6 +362,83 @@ class ServingCluster:
             return
         parked, self._parked = self._parked, []
         self.readmit(parked, now)
+
+    # --------------------------------------------------------- admission
+    def _admit_headroom(self, model_id: str) -> bool:
+        """True when the model pool's backlog per admitting replica is
+        under ``batch_admit_headroom`` discounted token-units — the gate
+        for lazily-admitted (batch) classes."""
+        pool = [r for r in self.replicas
+                if r.admitting and r.model_id == model_id]
+        if not pool:
+            return False
+        d = getattr(self.router, "prefill_discount", 1.0)
+        backlog = sum(r.engine.backlog_tokens() for r in pool)
+        backlog += sum(request_cost(q, d) for q in self.router.queue
+                       if q.model_id == model_id)
+        return backlog / len(pool) < self.batch_admit_headroom
+
+    def _admit_held(self, now: float):
+        if not self._held:
+            return
+        still: List[Request] = []
+        for req in self._held:
+            if self._admit_headroom(req.model_id):
+                self.router.submit(req)
+                self.log(now, f"admit req{req.rid} (headroom opened)")
+            else:
+                still.append(req)
+        self._held = still
+
+    # --------------------------------------------------------- rebalance
+    def _rebalance_pass(self, now: float):
+        """Proactive mid-stream migration (one move per model pool per
+        pass): when the slowest-draining replica's ETA exceeds the
+        fastest's by ``rebalance_ratio``, its costliest in-flight slot is
+        checkpointed and restored on the least-loaded replica with a free
+        slot — measured rates and prefill-discounted backlog only, and
+        only when the move strictly improves the pool's worst ETA."""
+        rates = self.rates()
+
+        def eta(r: Replica) -> float:
+            return (r.engine.backlog_tokens()
+                    / max(rates.get(r.rid, 1e-9), 1e-9))
+
+        for model_id in sorted({r.model_id for r in self.replicas}):
+            pool = [r for r in self.replicas
+                    if r.admitting and r.model_id == model_id]
+            if len(pool) < 2:
+                continue
+            src = max(pool, key=eta)
+            dsts = [r for r in pool
+                    if r is not src and r.engine.free_slots > 0]
+            if not dsts:
+                continue
+            dst = min(dsts, key=eta)
+            if eta(src) <= self.rebalance_ratio * eta(dst) + 1e-9:
+                continue
+            costs = src.engine.slot_costs()
+            if not costs:
+                continue          # backlog is queue-only: router's job
+            slot, cost = max(costs, key=lambda sc: sc[1])
+            r_src = max(rates.get(src.rid, 1e-9), 1e-9)
+            r_dst = max(rates.get(dst.rid, 1e-9), 1e-9)
+            new_worst = max(
+                (src.engine.backlog_tokens() - cost) / r_src,
+                (dst.engine.backlog_tokens() + cost) / r_dst)
+            if new_worst >= eta(src):
+                continue          # move would not improve the worst ETA
+            snaps, _times = src.checkpoint_slots([slot])
+            self._harvest(src, now)   # snapshot poll may complete slots
+            if not snaps:
+                continue
+            for s in snaps:
+                self.metrics.on_migration(s.request.rid)
+            self.metrics.rebalance_migrations += len(snaps)
+            dst.restore(snaps)
+            self.log(now, f"rebalance req{snaps[0].request.rid} "
+                          f"r{src.rid} -> r{dst.rid}")
+            self._kick(dst, now)
 
     def run(self, *, max_time: float = 100_000.0) -> Dict[str, float]:
         """Dispatch events until the loop drains (or ``max_time``)."""

@@ -23,11 +23,19 @@ class RequestTrace:
     arrival_t: float
     done_t: Optional[float] = None
     tokens: int = 0
-    migrations: int = 0          # times this request was drain-migrated
+    migrations: int = 0          # times this request was migrated
+    slo: str = "standard"        # SLO class name
+    deadline_t: float = float("inf")   # absolute completion deadline
+    model_id: str = "default"
 
     @property
     def latency(self) -> Optional[float]:
         return None if self.done_t is None else self.done_t - self.arrival_t
+
+    @property
+    def met_deadline(self) -> bool:
+        """Completed at or before the deadline (incomplete = missed)."""
+        return self.done_t is not None and self.done_t <= self.deadline_t
 
 
 @dataclasses.dataclass
@@ -53,10 +61,15 @@ class ClusterMetrics:
         self.traces: Dict[int, RequestTrace] = {}
         self.replicas: Dict[int, ReplicaStats] = {}
         self.drains: List[DrainRecord] = []
+        self.rebalance_migrations = 0    # mid-stream (load) slot moves
 
     # ------------------------------------------------------------ request
-    def on_submit(self, rid: int, now: float):
-        self.traces[rid] = RequestTrace(rid, now)
+    def on_submit(self, rid: int, now: float, *, slo: str = "standard",
+                  deadline_t: float = float("inf"),
+                  model_id: str = "default"):
+        self.traces[rid] = RequestTrace(rid, now, slo=slo,
+                                        deadline_t=deadline_t,
+                                        model_id=model_id)
 
     def on_done(self, rid: int, now: float, tokens: int):
         tr = self.traces[rid]
@@ -78,9 +91,47 @@ class ClusterMetrics:
         st.busy_s += busy_s
 
     # ------------------------------------------------------------ summary
-    def latencies(self) -> np.ndarray:
+    def latencies(self, slo: Optional[str] = None) -> np.ndarray:
         return np.asarray([t.latency for t in self.traces.values()
-                           if t.latency is not None], dtype=np.float64)
+                           if t.latency is not None
+                           and (slo is None or t.slo == slo)],
+                          dtype=np.float64)
+
+    def class_attainment(self, slo: str, *, model_id: Optional[str] = None,
+                         since: float = -np.inf,
+                         until: float = np.inf) -> Optional[float]:
+        """Fraction of a class's requests that met their deadline.
+
+        Scope: requests ARRIVED in [since, until] (so a truncated run
+        counts still-running late requests as misses, and the autoscaler
+        can ask about a recent window).  None when the class saw no
+        traffic in the window.
+        """
+        pop = [t for t in self.traces.values()
+               if t.slo == slo and since <= t.arrival_t <= until
+               and (model_id is None or t.model_id == model_id)]
+        if not pop:
+            return None
+        return sum(t.met_deadline for t in pop) / len(pop)
+
+    def slo_classes(self) -> List[str]:
+        return sorted({t.slo for t in self.traces.values()})
+
+    def overdue(self, now: float,
+                model_id: Optional[str] = None) -> Dict[str, int]:
+        """Per-class count of live requests already past their deadline.
+
+        The autoscaler's SLO-attainment signal: an overdue-but-running
+        request is a *decided* miss (it cannot un-miss), so a nonzero
+        count means the pool is under-provisioned for that class right
+        now — no completion statistics needed.
+        """
+        out: Dict[str, int] = {}
+        for t in self.traces.values():
+            if (t.done_t is None and t.deadline_t < now
+                    and (model_id is None or t.model_id == model_id)):
+                out[t.slo] = out.get(t.slo, 0) + 1
+        return out
 
     def summary(self, now: float) -> Dict[str, float]:
         lat = self.latencies()
@@ -109,9 +160,24 @@ class ClusterMetrics:
             "max_latency": float(lat.max()) if lat.size else 0.0,
             "migrated_slots": sum(d.slots_migrated for d in self.drains),
             "drains": len(self.drains),
+            "rebalance_migrations": self.rebalance_migrations,
             "interruption_overhead_s": sum(
                 d.checkpoint_s + d.restore_s for d in self.drains),
         }
+        # per-SLO-class attainment + tail latency (only when classed
+        # traffic was offered, so class-less runs keep the old summary)
+        for slo in self.slo_classes():
+            if slo == "standard" and len(self.slo_classes()) == 1:
+                break
+            lat = self.latencies(slo)
+            att = self.class_attainment(slo)
+            out[f"attainment_{slo}"] = att if att is not None else 1.0
+            out[f"p99_latency_{slo}"] = (float(np.percentile(lat, 99))
+                                         if lat.size else 0.0)
+            out[f"misses_{slo}"] = int(sum(
+                t.slo == slo and not t.met_deadline
+                and np.isfinite(t.deadline_t)
+                for t in self.traces.values()))
         return out
 
     def per_replica(self) -> List[Dict[str, float]]:

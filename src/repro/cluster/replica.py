@@ -41,6 +41,7 @@ class InstanceType:
     name: str
     speed: float                 # engine steps per virtual second
     spot: bool = True
+    model_id: str = "default"    # model pool this instance serves
 
 
 class ReplicaState(enum.Enum):
@@ -79,6 +80,10 @@ class Replica:
         self.last_step_cost = 1.0 / itype.speed
 
     # ------------------------------------------------------------- status
+    @property
+    def model_id(self) -> str:
+        return self.itype.model_id
+
     @property
     def serving(self) -> bool:
         """Accepting and executing work (at-risk replicas still serve)."""
@@ -141,32 +146,48 @@ class Replica:
         assert self.serving, self.state
         self.engine.restore_slots(snaps)
 
-    # ------------------------------------------------------------- drain
+    # ---------------------------------------------------- migration/drain
+    def _store_roundtrip(self, snaps: List[SlotSnapshot],
+                         name: str) -> Tuple[float, float]:
+        """Round-trip snapshot caches through ``InMemoryStore`` so the
+        §IV checkpoint/restore stages are actually exercised and timed,
+        not assumed.  Returns real (checkpoint_s, restore_s)."""
+        if not snaps:
+            return 0.0, 0.0
+        import numpy as np
+        ck0 = self.store.timer.stages.get("checkpoint", 0.0)
+        rs0 = self.store.timer.stages.get("restore", 0.0)
+        self.store.save(name, [s.cache for s in snaps])
+        caches = self.store.restore(name)
+        ckpt_s = self.store.timer.stages["checkpoint"] - ck0
+        restore_s = self.store.timer.stages["restore"] - rs0
+        for s, c in zip(snaps, caches):
+            s.cache = {k: np.asarray(v) for k, v in c.items()}
+        self.store.drop(name)
+        return ckpt_s, restore_s
+
+    def checkpoint_slots(self, slots: List[int]
+                         ) -> Tuple[List[SlotSnapshot],
+                                    Tuple[float, float]]:
+        """Mid-stream migration: checkpoint selected in-flight slots and
+        release them, while the replica keeps serving everything else —
+        the Charm++ migratable-chare move applied for *load*, not just
+        spot-drain."""
+        snaps = self.engine.snapshot_slots(slots=slots)
+        times = self._store_roundtrip(snaps, f"migrate_r{self.rid}")
+        return snaps, times
+
     def drain(self) -> Tuple[List[SlotSnapshot], List[Request],
                              Tuple[float, float]]:
         """Checkpoint in-flight slots through the store and empty the engine.
 
         Returns (snapshots, untouched queued requests, (checkpoint_s,
-        restore_s)).  The snapshots round-trip through ``InMemoryStore`` so
-        the §IV checkpoint/restore stages are actually exercised and
-        timed, not assumed.
+        restore_s)).
         """
         self.state = ReplicaState.DRAINING
         snaps, queued = self.engine.drain()
-        ckpt_s = restore_s = 0.0
-        if snaps:
-            import numpy as np
-            name = f"drain_r{self.rid}"
-            ck0 = self.store.timer.stages.get("checkpoint", 0.0)
-            rs0 = self.store.timer.stages.get("restore", 0.0)
-            self.store.save(name, [s.cache for s in snaps])
-            caches = self.store.restore(name)
-            ckpt_s = self.store.timer.stages["checkpoint"] - ck0
-            restore_s = self.store.timer.stages["restore"] - rs0
-            for s, c in zip(snaps, caches):
-                s.cache = {k: np.asarray(v) for k, v in c.items()}
-            self.store.drop(name)
-        return snaps, queued, (ckpt_s, restore_s)
+        times = self._store_roundtrip(snaps, f"drain_r{self.rid}")
+        return snaps, queued, times
 
     def terminate(self):
         self.state = ReplicaState.TERMINATED

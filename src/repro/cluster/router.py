@@ -1,6 +1,7 @@
 """Admission queue + dispatch over replicated ServingEngines.
 
-Two policies, the serving analogue of the paper's Fig 3 A/B:
+Three policies, the serving analogue of the paper's Fig 3 A/B plus the
+elastic-job-scheduler deadline layer (Bhosale & Kale) on top:
 
 * ``RoundRobinRouter`` — rate-oblivious baseline: queued requests are
   pinned to replicas cyclically, regardless of measured speed.
@@ -11,12 +12,23 @@ Two policies, the serving analogue of the paper's Fig 3 A/B:
   reclaims not-yet-admitted requests, places new arrivals on the
   earliest-finishing replica, then runs ``greedy_refine`` so placements
   self-correct as measured rates drift — with the minimum number of
-  queue migrations (§III-B).
+  queue migrations (§III-B).  Admission order is FIFO.
+* ``DeadlineAwareRouter`` — extends GreedyRefine to minimize predicted
+  deadline misses: pending requests are ordered by (priority, deadline),
+  the GreedyRefine assignment is simulated per replica (EDF service
+  order, measured rate, prefill-discounted backlog as base load) and a
+  repair pass relocates predicted-missing requests to whichever replica
+  reduces total predicted misses.
+
+Every router is **model-aware**: replicas declare a ``model_id`` (their
+``InstanceType``'s pool) and a request is only ever placed on a replica
+serving its model; requests whose pool currently has no admitting
+replica stay queued until one appears.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -25,6 +37,15 @@ from repro.serving.engine import (DEFAULT_PREFILL_DISCOUNT, Request,
                                   request_cost)
 
 from repro.cluster.replica import Replica
+
+
+def _pools(replicas: Sequence[Replica]) -> Dict[str, List[Replica]]:
+    """Admitting replicas grouped by model pool (stable replica order)."""
+    pools: Dict[str, List[Replica]] = {}
+    for rep in replicas:
+        if rep.admitting:
+            pools.setdefault(rep.model_id, []).append(rep)
+    return pools
 
 
 class Router:
@@ -42,35 +63,41 @@ class Router:
         """Drained (checkpoint-free) requests come back to the front."""
         self.queue = list(reqs) + self.queue
 
-    def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> List[Replica]:
+    def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
+                 now: float = 0.0) -> List[Replica]:
         """Place queued requests; returns the replicas that received work
         (so an event-driven cluster wakes exactly those)."""
         raise NotImplementedError
 
 
 class RoundRobinRouter(Router):
-    """Rate-oblivious baseline: cycle admitting replicas."""
+    """Rate-oblivious baseline: cycle admitting replicas per model pool."""
 
     name = "round_robin"
 
     def __init__(self):
         super().__init__()
-        self._next = 0
+        self._next: Dict[str, int] = {}
 
-    def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> List[Replica]:
-        targets = [r for r in replicas if r.admitting]
-        if not targets or not self.queue:
+    def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
+                 now: float = 0.0) -> List[Replica]:
+        pools = _pools(replicas)
+        if not pools or not self.queue:
             return []
-        touched = []
-        while self.queue:
-            req = self.queue.pop(0)
-            rep = targets[self._next % len(targets)]
-            self._next += 1
+        touched: List[Replica] = []
+        leftover: List[Request] = []
+        for req in self.queue:
+            targets = pools.get(req.model_id)
+            if not targets:
+                leftover.append(req)     # no admitting replica for pool
+                continue
+            n = self._next.get(req.model_id, 0)
+            rep = targets[n % len(targets)]
+            self._next[req.model_id] = n + 1
             rep.submit(req)
             if rep not in touched:
                 touched.append(rep)
+        self.queue = leftover
         return touched
 
 
@@ -88,23 +115,55 @@ class RateAwareRouter(Router):
         # requests don't overstate the load they will place on a replica
         self.prefill_discount = prefill_discount
 
-    def dispatch(self, replicas: List[Replica],
-                 rates: Dict[int, float]) -> List[Replica]:
-        targets = [r for r in replicas if r.admitting]
-        if not targets:
+    # ------------------------------------------------------------ hooks
+    def _order_pending(self, pending: List[Request]) -> List[Request]:
+        """Admission order within one placement round (FIFO here)."""
+        return pending
+
+    def _refine_assignment(self, assignment: np.ndarray,
+                           targets: List[Replica], pending: List[Request],
+                           loads: np.ndarray, rate: np.ndarray,
+                           base: np.ndarray, now: float) -> np.ndarray:
+        """Post-GreedyRefine repair hook (load-only router: identity)."""
+        return assignment
+
+    # --------------------------------------------------------- dispatch
+    def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
+                 now: float = 0.0) -> List[Replica]:
+        pools = _pools(replicas)
+        if not pools:
             return []
         # reclaim queued-but-unadmitted work so placement can be revised
-        pending: List[Request] = []
+        pending_by_model: Dict[str, List[Request]] = {}
         prev_home: Dict[int, int] = {}
-        for pe, rep in enumerate(targets):
-            for req in rep.engine.reclaim_queue():
-                prev_home[req.rid] = pe
-                pending.append(req)
-        pending.extend(self.queue)
-        self.queue = []
-        if not pending:
-            return []
+        for model_id, targets in pools.items():
+            for pe, rep in enumerate(targets):
+                for req in rep.engine.reclaim_queue():
+                    prev_home[req.rid] = pe
+                    pending_by_model.setdefault(model_id, []).append(req)
+        leftover: List[Request] = []
+        for req in self.queue:
+            if req.model_id in pools:
+                pending_by_model.setdefault(req.model_id, []).append(req)
+            else:
+                leftover.append(req)
+        self.queue = leftover
 
+        touched: List[Replica] = []
+        for model_id, targets in pools.items():
+            pending = pending_by_model.get(model_id)
+            if not pending:
+                continue
+            for rep in self._place_pool(targets, pending, rates,
+                                        prev_home, now):
+                if rep not in touched:
+                    touched.append(rep)
+        return touched
+
+    def _place_pool(self, targets: List[Replica], pending: List[Request],
+                    rates: Dict[int, float], prev_home: Dict[int, int],
+                    now: float) -> List[Replica]:
+        pending = self._order_pending(pending)
         rate = np.asarray([max(rates.get(r.rid, 1.0), 1e-9)
                            for r in targets])
         # in-flight slots are pinned: they contribute fixed base load
@@ -128,16 +187,97 @@ class RateAwareRouter(Router):
         res = greedy_refine(loads, len(targets), rates=rate,
                             current=current, base=base,
                             tolerance=self.tolerance)
+        assignment = self._refine_assignment(
+            np.asarray(res.assignment), targets, pending, loads, rate,
+            base, now)
         touched = []
         for i, req in enumerate(pending):
-            rep = targets[int(res.assignment[i])]
+            rep = targets[int(assignment[i])]
             rep.submit(req)
             if rep not in touched:
                 touched.append(rep)
         return touched
 
 
+def _slo_key(req: Request) -> Tuple[int, float, int]:
+    prio = req.slo.priority if req.slo is not None else 1
+    return (prio, req.deadline_t(), req.rid)
+
+
+class DeadlineAwareRouter(RateAwareRouter):
+    """GreedyRefine extended to minimize predicted deadline misses.
+
+    On top of the rate-aware placement: pending requests are admitted in
+    (priority, deadline) order — interactive work queue-jumps batch work
+    — and the GreedyRefine assignment is repaired by relocating requests
+    predicted to miss their deadline (EDF service simulation per replica
+    over measured rate and prefill-discounted backlog) onto the replica
+    that minimizes total predicted misses.
+    """
+
+    name = "slo_aware"
+
+    def __init__(self, tolerance: float = 1.05,
+                 prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
+                 max_repairs: int = 32):
+        super().__init__(tolerance, prefill_discount)
+        self.max_repairs = max_repairs
+
+    def _order_pending(self, pending: List[Request]) -> List[Request]:
+        return sorted(pending, key=_slo_key)
+
+    def _predicted_misses(self, assignment: np.ndarray,
+                          pending: List[Request], loads: np.ndarray,
+                          rate: np.ndarray, base: np.ndarray,
+                          deadlines: np.ndarray,
+                          now: float) -> Tuple[int, List[int]]:
+        """Simulate EDF service per replica; count predicted misses."""
+        misses, missed = 0, []
+        for pe in range(len(rate)):
+            t = now + base[pe] / rate[pe]
+            for i in np.flatnonzero(assignment == pe):
+                t += loads[i] / rate[pe]
+                if t > deadlines[i]:
+                    misses += 1
+                    missed.append(int(i))
+        return misses, missed
+
+    def _refine_assignment(self, assignment: np.ndarray,
+                           targets: List[Replica], pending: List[Request],
+                           loads: np.ndarray, rate: np.ndarray,
+                           base: np.ndarray, now: float) -> np.ndarray:
+        deadlines = np.asarray([q.deadline_t() for q in pending])
+        if not np.isfinite(deadlines).any() or len(targets) < 2:
+            return assignment
+        best, missed = self._predicted_misses(
+            assignment, pending, loads, rate, base, deadlines, now)
+        repairs = 0
+        while missed and best > 0 and repairs < self.max_repairs:
+            improved = False
+            # most urgent predicted miss first
+            for i in sorted(missed, key=lambda j: deadlines[j]):
+                home = int(assignment[i])
+                for pe in range(len(targets)):
+                    if pe == home:
+                        continue
+                    trial = assignment.copy()
+                    trial[i] = pe
+                    m, mi = self._predicted_misses(
+                        trial, pending, loads, rate, base, deadlines, now)
+                    if m < best:
+                        assignment, best, missed = trial, m, mi
+                        improved = True
+                        break
+                if improved:
+                    break
+            repairs += 1
+            if not improved:
+                break
+        return assignment
+
+
 ROUTERS = {
     "round_robin": RoundRobinRouter,
     "rate_aware": RateAwareRouter,
+    "slo_aware": DeadlineAwareRouter,
 }

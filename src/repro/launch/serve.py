@@ -23,7 +23,11 @@ from repro.serving.engine import ServingEngine
 
 
 def _make_requests(args, cfg):
-    from repro.serving.workload import synthetic_requests
+    from repro.serving.workload import classed_requests, synthetic_requests
+    if getattr(args, "slo_mix", None) is not None:
+        return classed_requests(args.requests, cfg.vocab_size,
+                                interactive_frac=args.slo_mix,
+                                seed=args.seed)
     return synthetic_requests(
         args.requests, cfg.vocab_size, seed=args.seed,
         prompt_len=(3, min(12, args.max_seq // 2)), max_new=args.max_new)
@@ -73,7 +77,9 @@ def run_cluster(args, cfg, params):
                         decode_block=args.decode_block,
                         dt=1.0, seed=args.seed,
                         rebalance_lead=args.rebalance_lead,
-                        notice_deadline=args.notice_deadline)
+                        notice_deadline=args.notice_deadline,
+                        admission=args.admission,
+                        rebalance_interval=args.migrate_every)
     from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
     cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
@@ -92,6 +98,14 @@ def run_cluster(args, cfg, params):
         print(f"  drains={out['drains']} migrated_slots="
               f"{out['migrated_slots']} ckpt+restore="
               f"{out['interruption_overhead_s']*1e3:.1f}ms")
+    if out["rebalance_migrations"]:
+        print(f"  rebalance_migrations={out['rebalance_migrations']}")
+    for k in sorted(out):
+        if k.startswith("attainment_"):
+            slo = k[len("attainment_"):]
+            print(f"  slo[{slo}]: attainment={out[k]:.3f} "
+                  f"p99={out.get(f'p99_latency_{slo}', 0.0):.1f}s "
+                  f"misses={out.get(f'misses_{slo}', 0)}")
     for rs in cl.metrics.per_replica():
         print(f"  replica r{rs['rid']} {rs['itype']}: {rs['tokens']} tok "
               f"@ {rs['tok_per_s']:.2f} tok/s (measured)")
@@ -122,7 +136,17 @@ def main():
     ap.add_argument("--fleet", default="2x2.0,2x0.7",
                     help="fleet spec: '<count>x<speed>,...'")
     ap.add_argument("--router", default="rate_aware",
-                    choices=("rate_aware", "round_robin"))
+                    choices=("rate_aware", "round_robin", "slo_aware"))
+    ap.add_argument("--admission", default="fifo",
+                    choices=("fifo", "priority"),
+                    help="priority holds batch-class arrivals until the "
+                         "fleet has backlog headroom")
+    ap.add_argument("--slo-mix", type=float, default=None,
+                    help="serve an interactive/batch SLO mix with this "
+                         "interactive fraction (default: class-less)")
+    ap.add_argument("--migrate-every", type=float, default=None,
+                    help="mid-stream migration pass interval in virtual "
+                         "seconds (default: off)")
     ap.add_argument("--interrupt-at", type=float, default=None,
                     help="inject a spot interruption on replica 0 at this "
                          "virtual time")

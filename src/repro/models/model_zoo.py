@@ -515,7 +515,8 @@ def init_sample_state(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
-                     temperature: float = 0.0, unroll: bool = False):
+                     temperature: float = 0.0, unroll: bool = False,
+                     eos_token: Optional[int] = None):
     """Fused sample-and-advance decode: ``n_steps`` serve_steps in ONE
     dispatch, sampling and continuous-batching bookkeeping on device.
 
@@ -525,6 +526,13 @@ def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
     ``prompt_buf`` (B, S) while finished-prefill slots take the sampled
     token, write it into ``out_buf`` and self-deactivate once ``fed``
     reaches ``maxfed`` — no host round-trip anywhere in the loop.
+
+    ``eos_token`` enables device-side early exit: a slot that samples the
+    EOS token writes it into ``out_buf`` and clears its own active flag,
+    so the remaining fused steps of the window skip it entirely.  Tokens
+    emitted before (and including) EOS are bit-identical to the
+    non-early-exit loop — the extra done condition only fires on the step
+    that produced the EOS sample.
     """
     serve_step = make_serve_step(cfg, shape, unroll=unroll)
     B, S = shape.global_batch, shape.seq_len
@@ -557,6 +565,8 @@ def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
                             sampled)
             next_tok = jnp.where(act[:, None], nxt[:, None], s.next_tok)
             done = generating & (fed2 >= s.maxfed)
+            if eos_token is not None:
+                done = done | (generating & (sampled == eos_token))
             active = s.active * (1 - done.astype(jnp.int32))
             return (state, SampleState(next_tok, active, fed2, s.plen,
                                        s.maxfed, out_buf, rng)), ()

@@ -67,11 +67,22 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # SLO metadata (an ``repro.serving.workload.SLOClass``; None = the
+    # cluster's default class) + the model pool this request must run on.
+    slo: Optional[Any] = None
+    model_id: str = "default"
+    arrival_t: Optional[float] = None   # stamped by the cluster's arrival
 
     @property
     def total_tokens(self) -> int:
         """Token-units of work: prompt + planned new tokens (LB load)."""
         return len(self.prompt) + self.max_new_tokens
+
+    def deadline_t(self, default: float = float("inf")) -> float:
+        """Absolute completion deadline (inf when class-less/unarrived)."""
+        if self.slo is None or self.arrival_t is None:
+            return default
+        return self.arrival_t + self.slo.deadline
 
 
 def request_cost(req: Request,
@@ -109,16 +120,18 @@ class SlotSnapshot:
 
 # One jitted fn per (cfg, shape[, bucket/block]): replicas in a cluster
 # share the compiled graphs instead of recompiling per engine.
-_LOOP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int, float], Any] = {}
+_LOOP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int, float,
+                        Optional[int]], Any] = {}
 _PREFILL_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int], Any] = {}
 
 
 def _shared_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
-                 temperature: float):
-    key = (cfg, shape, n_steps, float(temperature))
+                 temperature: float, eos_token: Optional[int] = None):
+    key = (cfg, shape, n_steps, float(temperature), eos_token)
     if key not in _LOOP_CACHE:
         _LOOP_CACHE[key] = jax.jit(
-            zoo.make_decode_loop(cfg, shape, n_steps, temperature),
+            zoo.make_decode_loop(cfg, shape, n_steps, temperature,
+                                 eos_token=eos_token),
             donate_argnums=(1, 2))
     return _LOOP_CACHE[key]
 
@@ -137,7 +150,7 @@ class ServingEngine:
                  prefill_mode: str = "chunked",
                  prefill_buckets: Tuple[int, ...] = DEFAULT_PREFILL_BUCKETS,
                  prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
-                 decode_block: int = 8):
+                 decode_block: int = 8, eos_token: Optional[int] = None):
         if prefill_mode not in ("chunked", "streamed"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.cfg = cfg
@@ -148,6 +161,12 @@ class ServingEngine:
         self.prefill_mode = prefill_mode
         self.prefill_discount = prefill_discount
         self.decode_block = max(int(decode_block), 1)
+        # device-side EOS early exit: a slot that samples this token
+        # clears its own active flag inside the fused loop.  The host
+        # projection can no longer predict completion, so eos engines
+        # reconcile against device truth after every window (one fetch
+        # per window instead of zero; the saved fused steps dominate).
+        self.eos_token = eos_token
         self.shape = ShapeConfig("serve", max_seq, batch_size, "decode")
         self.state = zoo.init_decode_state(cfg, self.shape, fill_len=0)
         self.sample = zoo.init_sample_state(cfg, self.shape, seed=seed)
@@ -225,17 +244,28 @@ class ServingEngine:
         engines and mis-steer the rate-aware router.
         """
         d = self.prefill_discount
-        load = 0.0
+        load = sum(cost for _, cost in self.slot_costs())
+        load += sum(s.remaining_cost(d) for s in self._restore)
+        load += sum(request_cost(r, d) for r in self._queue)
+        return load
+
+    def slot_costs(self) -> List[Tuple[int, float]]:
+        """Per occupied slot: (slot, remaining discounted load).
+
+        The cluster's rebalancer uses this to pick migration victims —
+        the slot with the most remaining work moves the most load per
+        snapshot/restore round-trip.
+        """
+        d = self.prefill_discount
+        out = []
         for slot, req in enumerate(self._slots):
             if req is None:
                 continue
             rem = max(int(self._maxfed[slot] - self._fed[slot]), 1)
             rem_prefill = min(
                 max(int(self._plen[slot] - 1 - self._fed[slot]), 0), rem)
-            load += rem_prefill * d + (rem - rem_prefill)
-        load += sum(s.remaining_cost(d) for s in self._restore)
-        load += sum(request_cost(r, d) for r in self._queue)
-        return load
+            out.append((slot, rem_prefill * d + (rem - rem_prefill)))
+        return out
 
     # ------------------------------------------------------------ admission
     def _pick_chunk(self, n_prefill: int) -> Tuple[int, int]:
@@ -355,19 +385,33 @@ class ServingEngine:
         if not occupied:
             self.processed_tokens += stats["processed"]
             return stats
-        loop = _shared_loop(self.cfg, self.shape, n_steps, self.temperature)
+        before = {slot: int(self._fed[slot]) for slot in occupied}
+        loop = _shared_loop(self.cfg, self.shape, n_steps, self.temperature,
+                            self.eos_token)
         self.state, self.sample = loop(self.params, self.state, self.sample,
                                        self._prompt_buf)
         stats["steps"] = n_steps
+        if self.eos_token is not None:
+            # EOS can end a slot at any inner step, invisibly to the host
+            # projection: reconcile against device truth every window
+            # (``_poll`` reads fed/active, harvests finished slots).
+            self._poll()
+            for slot in occupied:
+                after = int(self._fed[slot])
+                plen = int(self._plen[slot])
+                stats["processed"] += after - before[slot]
+                stats["emitted"] += (max(0, after - plen + 1)
+                                     - max(0, before[slot] - plen + 1))
+            self.processed_tokens += stats["processed"]
+            return stats
         done_any = False
         for slot in occupied:
-            before = int(self._fed[slot])
-            after = min(before + n_steps, int(self._maxfed[slot]))
+            after = min(before[slot] + n_steps, int(self._maxfed[slot]))
             self._fed[slot] = after
             plen = int(self._plen[slot])
-            stats["processed"] += after - before
+            stats["processed"] += after - before[slot]
             stats["emitted"] += (max(0, after - plen + 1)
-                                 - max(0, before - plen + 1))
+                                 - max(0, before[slot] - plen + 1))
             if after >= self._maxfed[slot]:
                 done_any = True
         self.processed_tokens += stats["processed"]
@@ -409,8 +453,9 @@ class ServingEngine:
         occupied = [i for i, r in enumerate(self._slots) if r is not None]
         if not occupied:
             return
-        out_buf, fed, next_tok = self._fetch(
-            (self.sample.out_buf, self.sample.fed, self.sample.next_tok))
+        out_buf, fed, next_tok, active = self._fetch(
+            (self.sample.out_buf, self.sample.fed, self.sample.next_tok,
+             self.sample.active))
         for slot in occupied:
             req = self._slots[slot]
             self._fed[slot] = int(fed[slot])
@@ -419,20 +464,27 @@ class ServingEngine:
             new = out_buf[slot, int(self._out_read[slot]):n]
             req.out_tokens.extend(int(t) for t in new)
             self._out_read[slot] = n
-            if fed[slot] >= self._maxfed[slot]:
+            # a device-deactivated occupied slot is finished — either it
+            # reached maxfed, or it sampled the EOS token and early-exited
+            if fed[slot] >= self._maxfed[slot] or int(active[slot]) == 0:
                 req.done = True
                 self._completed.append(req)
                 self._slots[slot] = None
 
     # --------------------------------------------------------- checkpointing
-    def snapshot_slots(self) -> List[SlotSnapshot]:
-        """Checkpoint and release every occupied slot (drain semantics).
+    def snapshot_slots(self, slots: Optional[List[int]] = None
+                       ) -> List[SlotSnapshot]:
+        """Checkpoint and release occupied slots (drain semantics).
 
-        Works at any point in a request's life — including right after a
-        bulk prefill chunk, before the prompt is fully fed.
+        ``slots`` restricts the checkpoint to a subset (the rebalancer's
+        mid-stream migration picks single victims); None takes every
+        occupied slot.  Works at any point in a request's life —
+        including right after a bulk prefill chunk, before the prompt is
+        fully fed.
         """
         self._poll()
-        occupied = [i for i, r in enumerate(self._slots) if r is not None]
+        occupied = [i for i, r in enumerate(self._slots)
+                    if r is not None and (slots is None or i in slots)]
         if not occupied:
             return []
         cache_host = {k: np.asarray(v)

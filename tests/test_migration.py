@@ -1,0 +1,177 @@
+"""Migration-invariance suite: a slot checkpointed at ANY point in a
+request's life — mid-decode or mid-prefill-chunk — and restored on a
+*different* replica resumes to a bit-identical token stream, for both
+causal (kv-cache) and ssm (recurrent-state) model families.
+
+This is the correctness substrate under both migration consumers: the
+§IV spot-drain and the proactive mid-stream rebalancer.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import InstanceType, Replica
+from repro.configs import get_config
+from repro.models import model_zoo as zoo
+from repro.serving.engine import Request, ServingEngine
+
+ARCHS = ["granite-8b", "mamba2-780m"]     # causal + ssm families
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        out[arch] = (cfg,
+                     zoo.init_state(cfg, jax.random.PRNGKey(0)).params)
+    return out
+
+
+def _prompt(cfg, n, seed):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n, dtype=np.int32)
+
+
+def _replica(cfg, params, rid, speed=1.0):
+    return Replica(rid, cfg, params, InstanceType(f"r{rid}", speed),
+                   batch_size=2, max_seq=64)
+
+
+def _reference_tokens(cfg, params, prompt, max_new):
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=64)
+    req = Request(rid=99, prompt=prompt.copy(), max_new_tokens=max_new)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.done
+    return req.out_tokens
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_migrate_mid_decode_bit_identical(models, arch):
+    """checkpoint_slots mid-generation -> restore on another replica."""
+    cfg, params = models[arch]
+    prompt = _prompt(cfg, 12, seed=1)
+    ref = _reference_tokens(cfg, params, prompt, max_new=12)
+
+    src = _replica(cfg, params, 0)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=12)
+    src.submit(req)
+    while src.engine.fed_tokens(0) <= len(prompt):   # cross into decode
+        src.step_once(now=0.0)
+    # genuinely mid-decode: past the prompt, not yet finished (out_tokens
+    # stays empty until a poll — progress lives in the host projection)
+    assert len(prompt) < src.engine.fed_tokens(0) < len(prompt) + 11
+    occupied = [s for s, _ in src.engine.slot_costs()]
+    snaps, (ckpt_s, restore_s) = src.checkpoint_slots(occupied[:1])
+    assert len(snaps) == 1
+    assert 0 < len(req.out_tokens) < 12     # snapshot poll materialized
+    assert ckpt_s >= 0.0 and restore_s >= 0.0   # store stages exercised
+    assert src.engine.n_active == 0     # slot released on the source
+
+    dst = _replica(cfg, params, 1)
+    dst.restore(snaps)
+    while dst.has_work():
+        dst.step_once(now=0.0)
+    dst.engine.pop_completed()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_migrate_mid_prefill_chunk_bit_identical(models, arch):
+    """Snapshot right after the bulk prefill chunk, before the prompt is
+    fully fed, and restore on a different replica."""
+    cfg, params = models[arch]
+    # longer than the smallest bucket so the tail is still streaming
+    # when we snapshot (chunk 16 + streamed tail)
+    prompt = _prompt(cfg, 30, seed=2)
+    ref = _reference_tokens(cfg, params, prompt, max_new=8)
+
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=64,
+                        prefill_buckets=(16,))
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    eng.submit(req)
+    eng.step()                          # admit: one 16-token chunk + 1 step
+    assert eng.chunk_prefills == 1
+    assert eng.fed_tokens(0) < len(prompt) - 1   # still mid-prefill
+    snaps = eng.snapshot_slots()
+    assert len(snaps) == 1 and snaps[0].fed < len(prompt)
+    assert req.out_tokens == []
+
+    dst = _replica(cfg, params, 1)
+    dst.restore(snaps)
+    while dst.has_work():
+        dst.step_once(now=0.0)
+    dst.engine.pop_completed()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_double_migration_bit_identical(models, arch):
+    """Two hops (src -> mid -> dst), one mid-prefill and one mid-decode,
+    still reproduce the reference stream exactly."""
+    cfg, params = models[arch]
+    prompt = _prompt(cfg, 24, seed=3)
+    ref = _reference_tokens(cfg, params, prompt, max_new=10)
+
+    src = Replica(0, cfg, params, InstanceType("src", 1.0),
+                  batch_size=2, max_seq=64)
+    src.engine._buckets = tuple(b for b in src.engine._buckets
+                                if b <= 16)     # force a streamed tail
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=10)
+    src.submit(req)
+    src.step_once(now=0.0)              # hop 1: mid-prefill
+    snaps, _ = src.checkpoint_slots([s for s, _ in
+                                     src.engine.slot_costs()])
+    mid = _replica(cfg, params, 1)
+    mid.restore(snaps)
+    while mid.engine.fed_tokens(0) <= len(prompt):  # cross into decode
+        mid.step_once(now=0.0)
+    assert mid.engine.fed_tokens(0) > len(prompt)   # hop 2: mid-decode
+    snaps, _ = mid.checkpoint_slots([s for s, _ in
+                                     mid.engine.slot_costs()])
+    assert 0 < len(req.out_tokens) < 10
+    dst = _replica(cfg, params, 2)
+    dst.restore(snaps)
+    while dst.has_work():
+        dst.step_once(now=0.0)
+    dst.engine.pop_completed()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+def test_selective_snapshot_leaves_other_slots_running(models):
+    """checkpoint_slots([victim]) must not disturb the co-resident slot:
+    it keeps decoding on the source to its reference continuation."""
+    cfg, params = models["granite-8b"]
+    p0, p1 = _prompt(cfg, 6, seed=4), _prompt(cfg, 6, seed=5)
+    ref0 = _reference_tokens(cfg, params, p0, max_new=10)
+    ref1 = _reference_tokens(cfg, params, p1, max_new=10)
+
+    src = _replica(cfg, params, 0)
+    r0 = Request(rid=0, prompt=p0.copy(), max_new_tokens=10)
+    r1 = Request(rid=1, prompt=p1.copy(), max_new_tokens=10)
+    src.submit(r0)
+    src.submit(r1)
+    for _ in range(2):
+        src.step_once(now=0.0)
+    assert src.engine.n_active == 2
+    victim = [s for s, _ in src.engine.slot_costs()
+              if src.engine._slots[s].rid == 0]
+    snaps, _ = src.checkpoint_slots(victim)
+    assert [s.request.rid for s in snaps] == [0]
+    assert src.engine.n_active == 1     # r1 still in place
+
+    dst = _replica(cfg, params, 1)
+    dst.restore(snaps)
+    while dst.has_work():
+        dst.step_once(now=0.0)
+    while src.has_work():
+        src.step_once(now=0.0)
+    src.engine.pop_completed()
+    dst.engine.pop_completed()
+    assert r0.done and r0.out_tokens == ref0
+    assert r1.done and r1.out_tokens == ref1

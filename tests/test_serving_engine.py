@@ -216,6 +216,62 @@ def test_backlog_discounts_prefill_tokens(model):
     assert streamed.backlog_tokens() == pytest.approx(60 - 1 + 4)
 
 
+# ------------------------------------------------------------- EOS exit
+def test_eos_early_exit_fewer_steps_identical_tokens(model):
+    """Device-side EOS early exit (active-mask clear inside the fused
+    loop): the engine finishes in FEWER fused steps, and the emitted
+    stream is bit-identical to the non-early-exit run truncated at the
+    first EOS."""
+    cfg, params = model
+    prompt = _prompt(10, seed=21)
+    base = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=48)
+    base.submit(req)
+    base_stats = base.run_until_idle()
+    full = list(req.out_tokens)
+    assert len(full) == 48
+    # pick a token the model actually emits mid-stream as the EOS id
+    eos = full[len(full) // 2]
+    cut = full.index(eos) + 1           # first occurrence, inclusive
+
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                        eos_token=eos)
+    req2 = Request(rid=1, prompt=prompt.copy(), max_new_tokens=48)
+    eng.submit(req2)
+    eos_stats = eng.run_until_idle()
+    assert req2.done
+    assert req2.out_tokens == full[:cut]
+    assert eos_stats["steps"] < base_stats["steps"]
+
+
+def test_eos_early_exit_batch_slots_independent(model):
+    """One slot EOS-exits early; its batchmate decodes to max_new
+    unchanged (the device mask clear never leaks across slots)."""
+    cfg, params = model
+    pa, pb = _prompt(8, seed=22), _prompt(8, seed=23)
+    base = ServingEngine(cfg, params, batch_size=2, max_seq=96)
+    ra = Request(rid=0, prompt=pa.copy(), max_new_tokens=30)
+    rb = Request(rid=1, prompt=pb.copy(), max_new_tokens=30)
+    base.submit(ra)
+    base.submit(rb)
+    base.run_until_idle()
+    eos = ra.out_tokens[8]              # a token only slot 0 hits early
+    if eos in rb.out_tokens[:8]:
+        pytest.skip("both streams hit the token early; seed collision")
+
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=96,
+                        eos_token=eos)
+    ra2 = Request(rid=0, prompt=pa.copy(), max_new_tokens=30)
+    rb2 = Request(rid=1, prompt=pb.copy(), max_new_tokens=30)
+    eng.submit(ra2)
+    eng.submit(rb2)
+    eng.run_until_idle()
+    assert ra2.out_tokens == ra.out_tokens[:ra.out_tokens.index(eos) + 1]
+    bcut = (rb.out_tokens.index(eos) + 1 if eos in rb.out_tokens
+            else len(rb.out_tokens))
+    assert rb2.out_tokens == rb.out_tokens[:bcut]
+
+
 def test_bucket_selection(model):
     cfg, params = model
     eng = ServingEngine(cfg, params, batch_size=2, max_seq=96)
