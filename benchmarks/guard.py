@@ -1,12 +1,18 @@
 """Perf-trajectory guard: fail CI when a persisted BENCH_*.json regresses.
 
-Currently guards the engine hot path: the chunked-bulk-prefill speedup
-over the streamed baseline (the ``engine_prefill_speedup`` row written by
-``benchmarks/run.py --scenario engine_throughput --json``) must stay at
-or above ``--min-speedup``.
+Two guarded figures, dispatched on the dump's ``scenario`` field:
+
+* ``engine_throughput`` — the chunked-bulk-prefill speedup over the
+  streamed baseline (row ``engine_prefill_speedup``) must stay at or
+  above ``--min-speedup``.
+* ``cluster_slo`` — SLO-aware scheduling's interactive-class deadline
+  attainment (row ``cluster_slo_slo_aware_interactive_p99``, derived
+  field ``attainment=<X>``) must stay at or above ``--min-attainment``.
 
 Usage:
   python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
+  python benchmarks/guard.py BENCH_cluster_slo.json --min-attainment 0.6
+  python benchmarks/guard.py BENCH_*.json          # guard all known dumps
 """
 
 from __future__ import annotations
@@ -17,36 +23,74 @@ import re
 import sys
 
 
-def prefill_speedup(bench: dict) -> float:
-    """Extract chunked-over-streamed speedup from an engine_throughput
-    benchmark dump (derived field ``chunked_over_streamed=<X>x``)."""
+def _derived(bench: dict, row_name: str, pattern: str) -> float:
     for r in bench.get("rows", []):
-        if r.get("name") == "engine_prefill_speedup":
-            m = re.search(r"chunked_over_streamed=([0-9.]+)x",
-                          r.get("derived", ""))
+        if r.get("name") == row_name:
+            m = re.search(pattern, r.get("derived", ""))
             if m:
                 return float(m.group(1))
-    raise SystemExit("guard: no engine_prefill_speedup row in the dump "
-                     "(run benchmarks/run.py --scenario engine_throughput "
-                     "--json first)")
+    raise SystemExit(
+        f"guard: no {row_name} row matching {pattern!r} in the dump "
+        f"(re-run benchmarks/run.py --scenario {bench.get('scenario')} "
+        f"--json first)")
+
+
+def prefill_speedup(bench: dict) -> float:
+    """Chunked-over-streamed speedup from an engine_throughput dump."""
+    return _derived(bench, "engine_prefill_speedup",
+                    r"chunked_over_streamed=([0-9.]+)x")
+
+
+def interactive_attainment(bench: dict) -> float:
+    """SLO-aware interactive deadline attainment from a cluster_slo dump."""
+    return _derived(bench, "cluster_slo_slo_aware_interactive_p99",
+                    r"attainment=([0-9.]+)")
+
+
+def check(bench: dict, args) -> bool:
+    scenario = bench.get("scenario", "")
+    if scenario == "engine_throughput":
+        speedup = prefill_speedup(bench)
+        if speedup < args.min_speedup:
+            print(f"guard: FAIL — chunked prefill speedup {speedup:.1f}x "
+                  f"regressed below {args.min_speedup:.1f}x",
+                  file=sys.stderr)
+            return False
+        print(f"guard: OK — chunked prefill speedup {speedup:.1f}x "
+              f">= {args.min_speedup:.1f}x")
+        return True
+    if scenario == "cluster_slo":
+        att = interactive_attainment(bench)
+        if att < args.min_attainment:
+            print(f"guard: FAIL — SLO-aware interactive attainment "
+                  f"{att:.3f} regressed below {args.min_attainment:.2f}",
+                  file=sys.stderr)
+            return False
+        print(f"guard: OK — SLO-aware interactive attainment {att:.3f} "
+              f">= {args.min_attainment:.2f}")
+        return True
+    print(f"guard: skip — no guard registered for scenario {scenario!r}")
+    return True
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("bench_json",
-                    help="path to BENCH_engine_throughput.json")
+    ap.add_argument("bench_json", nargs="+",
+                    help="path(s) to BENCH_<scenario>.json dumps")
     ap.add_argument("--min-speedup", type=float, default=3.0,
-                    help="minimum chunked/streamed prefill speedup")
+                    help="minimum chunked/streamed prefill speedup "
+                         "(engine_throughput dumps)")
+    ap.add_argument("--min-attainment", type=float, default=0.6,
+                    help="minimum SLO-aware interactive deadline "
+                         "attainment (cluster_slo dumps)")
     args = ap.parse_args()
-    with open(args.bench_json) as fh:
-        bench = json.load(fh)
-    speedup = prefill_speedup(bench)
-    if speedup < args.min_speedup:
-        print(f"guard: FAIL — chunked prefill speedup {speedup:.1f}x "
-              f"regressed below {args.min_speedup:.1f}x", file=sys.stderr)
+    ok = True
+    for path in args.bench_json:
+        with open(path) as fh:
+            bench = json.load(fh)
+        ok = check(bench, args) and ok
+    if not ok:
         raise SystemExit(1)
-    print(f"guard: OK — chunked prefill speedup {speedup:.1f}x "
-          f">= {args.min_speedup:.1f}x")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,9 @@ Sections (run all, or pick with positional names / ``--scenario``):
   cluster_slo         SLO layer A/B: priority admission + deadline routing +
                       mid-stream migration vs FIFO rate-aware, Poisson
                       interactive/batch mix + a drained spot interruption
+  cluster_preempt     SLO-aware preemption A/B: pause batch slots for an
+                      interactive surge vs buying replicas (attainment at
+                      equal-or-lower fleet dollar cost, identical tokens)
   engine_throughput   ServingEngine A/B: chunked bulk prefill + sync-free
                       batched decode vs the streamed per-token baseline
 
@@ -356,6 +359,121 @@ def cluster_slo(quick: bool = False):
         "the mid-stream rebalancer never migrated a slot"
 
 
+# ------------------------------------------------------------- preemption
+def cluster_preempt(quick: bool = False):
+    """SLO-aware preemption A/B (migratable WorkUnits as the paper's one
+    mechanism, preemption as a ControlPlane *policy* on top).
+
+    A fleet saturated with long batch-class decodes receives a seeded
+    interactive surge.  Both runs share the deadline-aware router and an
+    SLO-pressure autoscaler; they differ ONLY in the preemption policy:
+
+    * off — the base (hold-only) policy: interactive work waits for a
+      batch slot to free naturally; decided deadline misses push the
+      autoscaler into buying extra replicas (dollars for attainment).
+    * on  — ``SLOPreemption``: batch slots are *paused* through the same
+      pack/unpack mechanism as a drain (slot freed, snapshot retained),
+      interactive work admits immediately, and the paused streams resume
+      bit-identically once the surge clears.
+
+    Preemption must strictly improve interactive attainment at
+    equal-or-lower fleet dollar cost, with bit-identical per-request
+    token streams and zero dropped/incomplete requests.
+    """
+    import jax
+    from repro.cluster import (DeadlineAwareRouter, InstanceType,
+                               ServingCluster, SLOPreemption)
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.serving.engine import Request
+    from repro.serving.workload import SLOClass
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    n_rep = 2 if quick else 3
+    fleet = [InstanceType("std.1x", 1.0, cost_per_hour=1.0)
+             for _ in range(n_rep)]
+    interactive = SLOClass("interactive", 0, deadline=22.0)
+    batch = SLOClass("batch", 2, deadline=2000.0, admit_lazily=True)
+    n_batch = 2 * n_rep + 2              # saturate every slot + a queue
+    n_int = 2 * n_rep                    # one surge wave per slot-pair
+    surge_t = 8.0
+
+    def requests():
+        rng = np.random.default_rng(7)
+        reqs = []
+        for rid in range(n_batch):       # long batch decodes at t=0
+            reqs.append((0.0, Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(6, 10)),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(30, 38)), slo=batch)))
+        for rid in range(n_batch, n_batch + n_int):   # the surge
+            reqs.append((surge_t, Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(3, 6)),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(4, 7)),
+                slo=interactive)))
+        return reqs
+
+    def one_run(preempt: bool):
+        cl = ServingCluster(
+            cfg, params, fleet, router=DeadlineAwareRouter(),
+            dt=1.0, batch_size=2, max_seq=48, decode_block=2,
+            preemption=(SLOPreemption(max_preempts_per_pass=2 * n_rep)
+                        if preempt else None),
+            autoscaler_kw=dict(scale_up_backlog=100_000.0,
+                               scale_up_patience=2.0,
+                               replacement_latency=12.0,
+                               max_replicas=n_rep + 2,
+                               slo_scale_up=True))
+        reqs = requests()
+        for at, req in reqs:
+            cl.submit(req, at=at)
+        out = cl.run(max_time=10_000)
+        return cl, [r for _, r in reqs], out
+
+    results = {}
+    for tag, preempt in (("off", False), ("on", True)):
+        cl, reqs, out = one_run(preempt)
+        results[tag] = (reqs, out)
+        row(f"cluster_preempt_{tag}_interactive", 0.0,
+            f"attainment={out['attainment_interactive']:.3f};"
+            f"p99={out['p99_latency_interactive']:.1f}s")
+        row(f"cluster_preempt_{tag}_fleet", 0.0,
+            f"dollar_cost={out['fleet_dollar_cost']:.4f};"
+            f"replicas={len(cl.replicas)};"
+            f"preemptions={out['preemptions']};"
+            f"resumes={out['resumes']}")
+        assert out["dropped"] == 0, f"{tag}: dropped requests"
+        assert out["completed"] == n_batch + n_int, f"{tag}: incomplete"
+
+    (off_reqs, off), (on_reqs, on) = results["off"], results["on"]
+    for a, b in zip(off_reqs, on_reqs):
+        assert a.out_tokens == b.out_tokens, \
+            f"req{a.rid}: preemption changed decoded tokens"
+    att_off, att_on = (off["attainment_interactive"],
+                       on["attainment_interactive"])
+    cost_off, cost_on = off["fleet_dollar_cost"], on["fleet_dollar_cost"]
+    wins = att_on > att_off and cost_on <= cost_off + 1e-9
+    row("cluster_preempt_summary", 0.0,
+        f"preempt_beats_scaleup={wins};"
+        f"attainment={att_on:.3f}vs{att_off:.3f};"
+        f"dollar_cost={cost_on:.4f}vs{cost_off:.4f};"
+        f"preemptions={on['preemptions']};resumes={on['resumes']};"
+        f"identical_tokens=True")
+    assert on["preemptions"] > 0 and on["resumes"] == on["preemptions"], \
+        "SLO preemption never paused (or never resumed) a batch slot"
+    assert off["preemptions"] == 0, "baseline run must not preempt"
+    assert wins, (
+        f"preemption did not strictly improve interactive attainment at "
+        f"equal-or-lower cost: attainment {att_on:.3f} vs {att_off:.3f}, "
+        f"dollars {cost_on:.4f} vs {cost_off:.4f}")
+
+
 # ------------------------------------------------------------------ engine
 def engine_throughput(quick: bool = False):
     """ServingEngine hot-path A/B: chunked bulk prefill + sync-free
@@ -474,7 +592,8 @@ def roofline():
 
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
-            cluster_hetero, cluster_slo, engine_throughput, roofline]
+            cluster_hetero, cluster_slo, cluster_preempt,
+            engine_throughput, roofline]
 
 
 def main() -> None:

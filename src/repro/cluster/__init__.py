@@ -1,13 +1,25 @@
 """Cloud-native serving cluster (paper §III/§IV applied to serving).
 
-Replicated ``ServingEngine``s behind a rate-aware (optionally
-SLO/deadline-aware) router, with per-model pools, priority admission,
-mid-stream slot migration, elastic autoscaling and proactive
-spot-interruption drain.
+Replicated ``ServingEngine``s behind a pluggable ``ControlPlane``:
+in-flight requests are migratable ``WorkUnit``s (one pack/unpack
+lifecycle), and placement, SLO-aware preemption and cost-aware elastic
+scaling are swappable policies over a read-only ``ClusterView``.
 """
+
+from repro.serving.workunit import WorkUnit
 
 from repro.cluster.autoscaler import Autoscaler
 from repro.cluster.cluster import ServingCluster
+from repro.cluster.control import (BacklogScaling, ClusterView,
+                                   ControlPlane, CostAwareScaling,
+                                   MigrationPlan, PlacementPolicy,
+                                   PreemptOrder, PreemptionPolicy,
+                                   PREEMPTION_POLICIES, ResumeOrder,
+                                   ScaleDecision, ScalingPolicy,
+                                   SCALING_POLICIES, SLOPreemption)
+from repro.cluster.endpoint import (DeviceEndpoint, ENDPOINTS,
+                                    HostEndpoint, MigrationEndpoint,
+                                    make_endpoint)
 from repro.cluster.metrics import ClusterMetrics, VirtualClock
 from repro.cluster.replica import InstanceType, Replica, ReplicaState
 from repro.cluster.router import (DeadlineAwareRouter, RateAwareRouter,

@@ -1,54 +1,63 @@
-"""Elastic autoscaling + proactive spot-drain for the serving cluster.
+"""Spot-lifecycle handling + elastic scaling *mechanism*.
 
-Subscribes to two signal sources:
+The decisions live in a pluggable ``ScalingPolicy``
+(``repro.cluster.control``): when a pool grows or shrinks, and which
+``InstanceType`` to buy (``BacklogScaling`` = thresholds,
+``CostAwareScaling`` = price-performance over a catalog).  This class
+only executes:
 
-* the cluster's bound ``FaultTrace`` (repro.runtime) — the §IV spot
-  lifecycle, delivered as ``spot`` events on the shared loop.  On a
-  *rebalance recommendation* the autoscaler pre-warms a replacement
-  replica (the paper's Mode C: replacements are requested at the
-  recommendation, long before the 2-minute notice).  On the
-  *interruption notice* it drains the doomed replica: every in-flight
-  slot is checkpointed (via ``InMemoryStore``) and re-admitted onto the
-  healthiest surviving replicas; queued requests go back to the router.
-  Zero requests are dropped and no decoded token is recomputed.
-* Load + SLOs — thresholds grow and shrink the fleet **per model pool**
-  (the elastic-job-scheduler behaviour of Bhosale & Kale, applied to
-  serving): sustained backlog OR decided deadline misses (overdue live
-  requests of any SLO class) launches a replica into that pool; a
-  sustained-idle surplus replica is drained (losslessly) and retired.
+* spot events from the cluster's bound ``FaultTrace`` — on a *rebalance
+  recommendation* it pre-warms the policy-chosen replacement (the
+  paper's Mode C: replacements are requested at the recommendation,
+  long before the 2-minute notice); on the *interruption notice* it
+  drains the doomed replica: every in-flight slot is packed into
+  ``WorkUnit``s (staged through the replica's ``MigrationEndpoint``)
+  and re-admitted onto the healthiest survivors; queued requests go
+  back to the router.  Zero requests are dropped and no decoded token
+  is recomputed.
+* ``ScaleDecision``s from ``policy.decide`` — launches are billed from
+  the decision time; retirements drain losslessly, then terminate.
+
+A ``default_itype`` that serves NO pool of the fleet is a configuration
+error and is rejected at construction; a default that serves a
+*different* pool than the one scaling up is substituted by the pool's
+own type — and the substitution is logged on the cluster timeline, never
+silent (``ScalingPolicy.select_itype``).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Optional
 
 from repro.core.cloud import SpotNotice
 
+from repro.cluster.control import BacklogScaling, ScalingPolicy
 from repro.cluster.metrics import DrainRecord
-from repro.cluster.replica import InstanceType, Replica, ReplicaState
+from repro.cluster.replica import Replica, ReplicaState
 
 
 class Autoscaler:
     def __init__(self, cluster, *, replacement_latency: float = 90.0,
-                 scale_up_backlog: float = 128.0,
-                 scale_up_patience: float = 30.0,
-                 scale_down_idle: float = 120.0,
-                 min_replicas: int = 1,
-                 max_replicas: int = 8,
-                 slo_scale_up: bool = True,
-                 default_itype: Optional[InstanceType] = None):
+                 scaling: Optional[ScalingPolicy] = None, **policy_kw):
         self.cluster = cluster
         self.replacement_latency = replacement_latency
-        self.scale_up_backlog = scale_up_backlog
-        self.scale_up_patience = scale_up_patience
-        self.scale_down_idle = scale_down_idle
-        self.min_replicas = min_replicas
-        self.max_replicas = max_replicas
-        self.slo_scale_up = slo_scale_up
-        self.default_itype = default_itype
-        # per-model-pool hysteresis timers
-        self._over_since: Dict[str, float] = {}
-        self._idle_since: Dict[str, float] = {}
+        if scaling is not None and policy_kw:
+            raise ValueError(
+                f"an explicit scaling policy carries its own thresholds; "
+                f"drop the conflicting autoscaler kwargs "
+                f"{sorted(policy_kw)} or configure the policy instead")
+        self.policy = scaling if scaling is not None \
+            else BacklogScaling(**policy_kw)
+        default = self.policy.default_itype
+        if default is not None:
+            pools = ({it.model_id for it in
+                      (r.itype for r in cluster.replicas)}
+                     | set(cluster.models))
+            if default.model_id not in pools:
+                raise ValueError(
+                    f"default_itype {default.name!r} serves model pool "
+                    f"{default.model_id!r}, which no fleet instance or "
+                    f"configured model provides (pools: {sorted(pools)})")
 
     # ------------------------------------------------------------- events
     def handle_spot(self, ev: SpotNotice, now: float):
@@ -58,96 +67,65 @@ class Autoscaler:
         if ev.kind == "rebalance_recommendation":
             if rep.serving:
                 rep.state = ReplicaState.AT_RISK
-                # Mode C: request the replacement NOW, rescale later
+                # Mode C: request the replacement NOW, rescale later —
+                # the scaling policy chooses the instance type (cost-
+                # aware policies may shop the catalog instead of
+                # replacing like-for-like)
+                itype = self.policy.replacement(self.cluster.view, rep)
                 new = self.cluster.launch(
-                    rep.itype, ready_at=now + self.replacement_latency)
+                    itype, ready_at=now + self.replacement_latency,
+                    at=now)
                 self.cluster.log(now, f"rebalance_recommendation r{rep.rid} "
-                                      f"prewarm r{new.rid}")
+                                      f"prewarm r{new.rid} ({itype.name})")
         elif ev.kind == "interruption_notice":
             self.cluster.log(now, f"interruption_notice r{rep.rid}")
             self.drain(rep, now)
         elif ev.kind == "terminate":
-            rep.terminate()
+            self.cluster.retire(rep, now)
             self.cluster.log(now, f"terminated r{rep.rid}")
 
     def drain(self, rep: Replica, now: float):
-        """Checkpoint the doomed replica's slots; re-admit them elsewhere."""
+        """Pack the doomed replica's slots; re-admit them elsewhere."""
         self.cluster.loop.cancel(rep.step_event)   # no step after the drain
         rep.step_event = None
-        snaps, queued, (ckpt_s, restore_s) = rep.drain()
-        # the drain's snapshot poll may discover just-finished slots: they
+        units, queued, (ckpt_s, restore_s) = rep.drain_units()
+        # the drain's pack poll may discover just-finished slots: they
         # complete here, not migrate (the replica never steps again)
         self.cluster._harvest(rep, now)
         metrics = self.cluster.metrics
         metrics.drains.append(DrainRecord(
-            t=now, replica=rep.rid, slots_migrated=len(snaps),
+            t=now, replica=rep.rid, slots_migrated=len(units),
             queued_requeued=len(queued), checkpoint_s=ckpt_s,
-            restore_s=restore_s))
-        for s in snaps:
-            metrics.on_migration(s.request.rid)
+            restore_s=restore_s, endpoint=rep.endpoint.kind))
+        for u in units:
+            u.packed_t = now
+            metrics.on_migration(u.rid)
         if queued:
             self.cluster.router.requeue(queued)
         # least-loaded-first (rate-scaled) re-admission; parked if nobody
         # is serving yet (re-admitted once a replacement comes up)
-        self.cluster.readmit(snaps, now)
+        self.cluster.readmit(units, now)
 
     # ------------------------------------------------------------- load
     def tick(self, now: float):
-        """Evaluate every model pool independently: replicas, backlog,
-        and SLO pressure never leak across pools."""
+        """Evaluate every model pool independently (replicas, backlog,
+        and SLO pressure never leak across pools) and execute the
+        policy's decisions."""
         cl = self.cluster
-        for model_id in sorted({r.model_id for r in cl.replicas}):
-            self._tick_pool(model_id, now)
-
-    def _tick_pool(self, model_id: str, now: float):
-        cl = self.cluster
-        serving = [r for r in cl.replicas
-                   if r.serving and r.model_id == model_id]
-        launching = [r for r in cl.replicas
-                     if r.state == ReplicaState.LAUNCHING
-                     and r.model_id == model_id]
-        if not serving:
-            return
-        backlog = sum(r.backlog_tokens() for r in serving) \
-            + sum(q.total_tokens for q in cl.router.queue
-                  if q.model_id == model_id) \
-            + sum(q.total_tokens for q in cl._held
-                  if q.model_id == model_id)
-        per_replica = backlog / max(len(serving) + len(launching), 1)
-        # SLO pressure: live requests already past their deadline are
-        # decided misses — the pool is under-provisioned for that class
-        overdue = (sum(cl.metrics.overdue(now, model_id=model_id).values())
-                   if self.slo_scale_up else 0)
-
-        # scale up on sustained backlog or sustained deadline pressure
-        if per_replica > self.scale_up_backlog or overdue > 0:
-            if model_id not in self._over_since:
-                self._over_since[model_id] = now
-            elif (now - self._over_since[model_id] >= self.scale_up_patience
-                    and len(serving) + len(launching) < self.max_replicas):
-                itype = self.default_itype or serving[0].itype
-                if itype.model_id != model_id:
-                    itype = serving[0].itype
-                new = cl.launch(itype,
-                                ready_at=now + self.replacement_latency)
-                why = (f"overdue={overdue}" if overdue
-                       else f"backlog/replica={per_replica:.0f}")
-                cl.log(now, f"scale_up r{new.rid} ({itype.name}) "
-                            f"pool={model_id} {why}")
-                del self._over_since[model_id]
-        else:
-            self._over_since.pop(model_id, None)
-
-        # scale down a surplus replica after a sustained idle window
-        if backlog == 0 and not launching and len(serving) > self.min_replicas:
-            if model_id not in self._idle_since:
-                self._idle_since[model_id] = now
-            elif now - self._idle_since[model_id] >= self.scale_down_idle:
-                victim = min(serving,
-                             key=lambda r: cl.rates().get(r.rid, 1.0))
-                self.drain(victim, now)
-                victim.terminate()
-                cl.log(now, f"scale_down r{victim.rid} pool={model_id}")
-                del self._idle_since[model_id]
-        else:
-            self._idle_since.pop(model_id, None)
+        for model_id in cl.view.pools():
+            decision = self.policy.decide(cl.view, model_id, now)
+            if decision is None:
+                continue
+            if decision.launch is not None:
+                new = cl.launch(decision.launch,
+                                ready_at=now + self.replacement_latency,
+                                at=now)
+                cl.log(now, f"scale_up r{new.rid} ({decision.launch.name}) "
+                            f"pool={model_id} {decision.reason}")
+            if decision.retire is not None:
+                victim = cl.replica_by_rid(decision.retire)
+                if victim is not None and victim.serving:
+                    self.drain(victim, now)
+                    cl.retire(victim, now)
+                    cl.log(now, f"scale_down r{victim.rid} "
+                                f"pool={model_id} ({decision.reason})")

@@ -1,16 +1,21 @@
 """ServingCluster: message-driven replicas on the shared event runtime.
 
 The serving analogue of the paper's adaptive runtime: ``ServingEngine``
-replicas are PEs, in-flight requests are migratable chares, the router is
-the rate-aware load balancer, and the autoscaler is the CloudManager
-policy layer (pre-warm on rebalance recommendation, drain on the
-2-minute notice, elastic grow/shrink on load).
+replicas are PEs, in-flight requests are migratable chares packed into
+``WorkUnit``s, and every control decision — routing, mid-stream
+rebalancing, SLO-aware preemption, spot handling, elastic scaling — is a
+pluggable policy on the ``ControlPlane`` (``repro.cluster.control``)
+operating over a read-only ``ClusterView``.  The cluster itself owns
+only *mechanism*: it schedules events, executes policy orders through
+the one pack/unpack verb set, and keeps the books.
 
 There is no global lockstep tick.  The cluster registers named handlers
 on one ``repro.runtime.EventLoop``:
 
-* ``arrival``       — a request reaches the router (scheduled one-by-one
-                      by an open-loop ``ArrivalProcess`` or ``submit``);
+* ``arrival``       — a request reaches the admission gate (scheduled
+                      one-by-one by an open-loop ``ArrivalProcess`` or
+                      ``submit``); the preemption policy may hold
+                      lazily-admitted classes at the door;
 * ``spot``          — one §IV lifecycle event from the bound
                       ``FaultTrace`` (shareable with ``CloudManager``);
 * ``replica_step``  — ``decode_block`` fused engine steps on one replica
@@ -21,23 +26,21 @@ on one ``repro.runtime.EventLoop``:
                       has work, so a slow replica never quantizes a fast
                       one to a global ``dt``;
 * ``replica_ready`` — a pre-warmed replacement comes up;
-* ``control``       — periodic autoscaler evaluation while work pends;
-* ``rebalance``     — periodic mid-stream migration pass: in-flight
-                      slots move from overloaded/slow replicas to
-                      underloaded ones through the engine's
-                      ``snapshot_slots``/``restore_slots`` path (the
-                      Charm++ migratable-chare move, exploited
-                      *proactively* for load — not just at spot-drain).
+* ``control``       — periodic scaling-policy evaluation while work
+                      pends;
+* ``rebalance``     — periodic mid-stream migration pass: the placement
+                      policy returns ``MigrationPlan``s and in-flight
+                      units move through pack/unpack (the Charm++
+                      migratable-chare move, exploited *proactively* for
+                      load — not just at spot-drain).
 
-The SLO layer rides these events: requests carry an ``SLOClass``
-(deadline + priority); under ``admission="priority"`` latency-sensitive
-classes queue-jump while ``admit_lazily`` (batch) classes are held at
-arrival until the fleet has backlog headroom; the ``DeadlineAwareRouter``
-places by predicted deadline misses.  Replicas belong to per-model pools
-(``InstanceType.model_id``) and routing/migration never crosses pools.
-
-All policy decisions consume *measured* rates from the shared
-``RateMonitor`` — never the InstanceType ground truth.
+After every state-changing event one ``_dispatch`` pass runs: re-admit
+parked units, ask the preemption policy about held arrivals, let the
+placement policy route, then let the preemption policy pause
+batch-class slots whose replicas have urgent waiting work (and resume
+parked units once the pressure clears).  All policy decisions consume
+*measured* rates from the shared ``RateMonitor`` — never the
+InstanceType ground truth.
 """
 
 from __future__ import annotations
@@ -50,13 +53,19 @@ from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
 from repro.core.rates import RateMonitor
 from repro.runtime import EventLoop, FaultTrace, VirtualClock
-from repro.serving.engine import Request, SlotSnapshot, request_cost
+from repro.serving.engine import Request
 from repro.serving.workload import STANDARD, SLOClass
+from repro.serving.workunit import WorkUnit
 
 from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.control import (ClusterView, ControlPlane,
+                                   PreemptionPolicy, ScalingPolicy)
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.replica import InstanceType, Replica, ReplicaState
 from repro.cluster.router import RateAwareRouter, Router
+
+# re-exported for callers that only import the cluster module
+__all__ = ["ServingCluster", "ClusterView", "ControlPlane"]
 
 
 class ServingCluster:
@@ -77,7 +86,9 @@ class ServingCluster:
                  batch_admit_headroom: float = 64.0,
                  default_slo: SLOClass = STANDARD,
                  rebalance_interval: Optional[float] = None,
-                 rebalance_ratio: float = 1.75):
+                 rebalance_ratio: float = 1.75,
+                 preemption: Optional[PreemptionPolicy] = None,
+                 scaling: Optional[ScalingPolicy] = None):
         if admission not in ("fifo", "priority"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -105,7 +116,6 @@ class ServingCluster:
         self.faults = trace if trace is not None else FaultTrace(
             rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
         self.metrics = ClusterMetrics()
-        self.autoscaler = Autoscaler(self, **(autoscaler_kw or {}))
         self.timeline: List[Tuple[float, str]] = []
         self._rid = itertools.count()
         self.loop.register("arrival", self._on_arrival)
@@ -119,10 +129,24 @@ class ServingCluster:
         self.replicas: List[Replica] = []
         for itype in fleet:
             self.launch(itype, ready_at=0.0)
+        # the control plane: three policy seams over one read-only view.
+        # The autoscaler owns the scaling policy (it also validates a
+        # default_itype against the fleet's pools at construction); the
+        # router IS the placement policy; preemption defaults to the
+        # hold-only policy parameterized by batch_admit_headroom.
+        self.view = ClusterView(self)
+        self.autoscaler = Autoscaler(self, scaling=scaling,
+                                     **(autoscaler_kw or {}))
+        self.control = ControlPlane(
+            placement=self.router,
+            preemption=(preemption if preemption is not None else
+                        PreemptionPolicy(batch_admit_headroom)),
+            scaling=self.autoscaler.policy)
         self._control_ev = None
         self._dispatch_ev = None
         self._rebalance_ev = None
-        self._parked: List[SlotSnapshot] = []
+        self._parked: List[WorkUnit] = []
+        self._paused: List[WorkUnit] = []  # preempted, awaiting resume
         self._held: List[Request] = []   # lazily-admitted (batch) arrivals
         self._completion_hooks: List[Callable] = []
 
@@ -130,7 +154,10 @@ class ServingCluster:
     def model_for(self, model_id: str) -> Tuple[ModelConfig, object]:
         return self.models.get(model_id, (self.cfg, self.params))
 
-    def launch(self, itype: InstanceType, *, ready_at: float) -> Replica:
+    def launch(self, itype: InstanceType, *, ready_at: float,
+               at: Optional[float] = None) -> Replica:
+        """Bring up a replica; billing starts at ``at`` (the request
+        time — a pre-warmed instance costs money while it warms)."""
         rid = next(self._rid)
         if rid >= self.monitor.n_pes:
             self.monitor.resize(rid + 1)
@@ -143,10 +170,17 @@ class ServingCluster:
                       monitor=self.monitor, store=self.store,
                       ready_at=ready_at, seed=self.seed)
         self.replicas.append(rep)
-        self.metrics.ensure_replica(rid, itype.name)
+        self.metrics.on_launch(rid, itype.name, model_id=itype.model_id,
+                               cost_per_hour=itype.cost_per_hour,
+                               t=at if at is not None else ready_at)
         if rep.state == ReplicaState.LAUNCHING:
             self.loop.schedule(ready_at, "replica_ready", rid=rid)
         return rep
+
+    def retire(self, rep: Replica, now: float):
+        """Terminate a replica and stop its meter."""
+        rep.terminate()
+        self.metrics.on_terminate(rep.rid, now)
 
     def replica_by_rid(self, rid: int) -> Optional[Replica]:
         for r in self.replicas:
@@ -160,13 +194,13 @@ class ServingCluster:
         return {rep.rid: float(r[rep.rid]) for rep in self.replicas
                 if rep.rid < len(r)}
 
-    def readmit(self, snaps: List[SlotSnapshot], now: float) -> bool:
-        """Place checkpointed slots on the least-loaded admitting replicas.
+    def readmit(self, units: List[WorkUnit], now: float) -> bool:
+        """Place packed units on the least-loaded admitting replicas.
 
-        Returns False (and parks the snapshots) when nobody can take them;
+        Returns False (and parks the units) when nobody can take them;
         they are re-admitted as soon as a replica is serving again.
         """
-        if not snaps:
+        if not units:
             return True
         rates = self.rates()
 
@@ -174,19 +208,19 @@ class ServingCluster:
             return r.engine.backlog_tokens() / max(rates.get(r.rid, 1.0),
                                                    1e-9)
         all_placed = True
-        for s in snaps:
-            # placement never crosses model pools: a snapshot only fits
-            # an engine built from the same (cfg, max_seq)
+        for u in units:
+            # placement never crosses model pools: a unit only fits an
+            # engine built from the same (cfg, max_seq)
             survivors = [r for r in self.replicas if r.admitting
-                         and r.model_id == s.request.model_id]
+                         and r.model_id == u.request.model_id]
             if not survivors:
-                self._parked.append(s)
+                self._parked.append(u)
                 all_placed = False
                 continue
             tgt = min(survivors, key=key)
-            tgt.restore([s])
+            tgt.unpack([u])
             self._kick(tgt, now)
-            self.log(now, f"readmit req{s.request.rid} -> r{tgt.rid}")
+            self.log(now, f"readmit req{u.rid} -> r{tgt.rid}")
         return all_placed
 
     def log(self, t: float, msg: str):
@@ -229,12 +263,13 @@ class ServingCluster:
                                deadline_t=req.deadline_t(),
                                model_id=req.model_id)
         # priority admission: lazily-admitted classes (batch) wait at the
-        # door until the fleet has backlog headroom, so they never crowd
-        # out latency-sensitive work; everyone else enters the router
-        # queue, where an SLO-aware router lets interactive requests
-        # queue-jump by (priority, deadline) order
+        # door while the preemption policy's headroom gate says the fleet
+        # is loaded, so they never crowd out latency-sensitive work;
+        # everyone else enters the router queue, where an SLO-aware
+        # router lets interactive requests queue-jump by (priority,
+        # deadline) order
         if (self.admission == "priority" and req.slo.admit_lazily
-                and not self._admit_headroom(req.model_id)):
+                and self.control.preemption.hold(req, self.view)):
             self._held.append(req)
             self.log(t, f"hold req{req.rid} ({req.slo.name}: no headroom)")
         else:
@@ -280,7 +315,7 @@ class ServingCluster:
         self.metrics.on_tokens(rep.rid, emitted, rep.last_step_cost)
         done = self._harvest(rep, t)
         # the batch just run occupies [t, t + last_step_cost): the next
-        # step event lands after its accounted (per-chunk) cost
+        # step event lands after its accounted cost
         self._kick(rep, t, delay=rep.last_step_cost)
         if done:
             self._dispatch(t)   # headroom may have opened for held work
@@ -288,8 +323,8 @@ class ServingCluster:
     def _harvest(self, rep: Replica, t: float) -> List[Request]:
         """Collect completed requests from a replica: record metrics and
         fire completion hooks (closed-loop arrival re-arming).  Called
-        after step events AND after any snapshot path that can complete a
-        slot mid-poll (drain, rebalance migration)."""
+        after step events AND after any pack path that can complete a
+        slot mid-poll (drain, rebalance migration, preemption)."""
         done = rep.completed + rep.engine.pop_completed()
         rep.completed = []
         for req in done:
@@ -329,11 +364,18 @@ class ServingCluster:
             now + delay, "replica_step", rid=rep.rid)
 
     def _dispatch(self, now: float):
-        """Router pass + wake-ups; runs after any state-changing event."""
+        """One control-plane pass; runs after any state-changing event.
+
+        Mechanism only — every decision is delegated: parked units
+        re-admit, the preemption policy rules on held arrivals, the
+        placement policy routes, then the preemption policy may pause
+        saturated batch work / resume parked units.
+        """
         self._unpark(now)
         self._admit_held(now)
-        for rep in self.router.dispatch(self.replicas, self.rates(), now):
+        for rep in self.control.placement.place(self.view, now):
             self._kick(rep, now)
+        self._preemption_pass(now)
         self._ensure_control(now)
         self._ensure_rebalance(now)
 
@@ -354,7 +396,7 @@ class ServingCluster:
 
     def _pending_work(self) -> bool:
         return (bool(self.router.queue) or bool(self._parked)
-                or bool(self._held)
+                or bool(self._held) or bool(self._paused)
                 or any(r.serving and r.has_work() for r in self.replicas))
 
     def _unpark(self, now: float):
@@ -364,79 +406,76 @@ class ServingCluster:
         self.readmit(parked, now)
 
     # --------------------------------------------------------- admission
-    def _admit_headroom(self, model_id: str) -> bool:
-        """True when the model pool's backlog per admitting replica is
-        under ``batch_admit_headroom`` discounted token-units — the gate
-        for lazily-admitted (batch) classes."""
-        pool = [r for r in self.replicas
-                if r.admitting and r.model_id == model_id]
-        if not pool:
-            return False
-        d = getattr(self.router, "prefill_discount", 1.0)
-        backlog = sum(r.engine.backlog_tokens() for r in pool)
-        backlog += sum(request_cost(q, d) for q in self.router.queue
-                       if q.model_id == model_id)
-        return backlog / len(pool) < self.batch_admit_headroom
-
     def _admit_held(self, now: float):
         if not self._held:
             return
-        still: List[Request] = []
-        for req in self._held:
-            if self._admit_headroom(req.model_id):
-                self.router.submit(req)
-                self.log(now, f"admit req{req.rid} (headroom opened)")
-            else:
-                still.append(req)
-        self._held = still
+        admit, self._held = self.control.preemption.admit_held(
+            self._held, self.view)
+        for req in admit:
+            self.router.submit(req)
+            self.log(now, f"admit req{req.rid} (headroom opened)")
+
+    # -------------------------------------------------------- preemption
+    def _preemption_pass(self, now: float):
+        """Execute the preemption policy's pause/resume orders through
+        the WorkUnit verbs.  Paused units park on the cluster (their
+        snapshot retained, slot freed); resumes re-admit them with
+        restore-queue priority, so the stream continues bit-identically
+        ahead of fresh arrivals."""
+        pol = self.control.preemption
+        for order in pol.preempt(self.view, now):
+            rep = self.replica_by_rid(order.rid)
+            if rep is None or not rep.serving:
+                continue
+            units, (ckpt_s, restore_s) = rep.preempt(order.slots)
+            self._harvest(rep, now)   # the pack poll may complete slots
+            if units:                 # one staging round trip per order
+                self.metrics.preempt_stage_s += ckpt_s + restore_s
+            for u in units:
+                u.packed_t = now
+                self.metrics.on_preempt(u.rid)
+                self.log(now, f"preempt req{u.rid} ({u.slo_name}) "
+                              f"r{rep.rid} slot freed")
+            self._paused.extend(units)
+            self._kick(rep, now)
+        if not self._paused:
+            return
+        for order in pol.resume(self.view, now):
+            rep = self.replica_by_rid(order.rid)
+            if rep is None or not rep.admitting:
+                continue
+            units = [u for u in order.units if u in self._paused]
+            if not units:
+                continue
+            for u in units:
+                self._paused.remove(u)
+                self.metrics.on_resume(u.rid)
+                self.log(now, f"resume req{u.rid} -> r{rep.rid}")
+            rep.resume(units)
+            self._kick(rep, now)
 
     # --------------------------------------------------------- rebalance
     def _rebalance_pass(self, now: float):
-        """Proactive mid-stream migration (one move per model pool per
-        pass): when the slowest-draining replica's ETA exceeds the
-        fastest's by ``rebalance_ratio``, its costliest in-flight slot is
-        checkpointed and restored on the least-loaded replica with a free
-        slot — measured rates and prefill-discounted backlog only, and
-        only when the move strictly improves the pool's worst ETA."""
-        rates = self.rates()
-
-        def eta(r: Replica) -> float:
-            return (r.engine.backlog_tokens()
-                    / max(rates.get(r.rid, 1e-9), 1e-9))
-
-        for model_id in sorted({r.model_id for r in self.replicas}):
-            pool = [r for r in self.replicas
-                    if r.admitting and r.model_id == model_id]
-            if len(pool) < 2:
+        """Execute the placement policy's mid-stream migration plans:
+        pack the chosen slot, stage it through the source's endpoint,
+        unpack on the destination."""
+        plans = self.control.placement.rebalance(
+            self.view, now, ratio=self.rebalance_ratio)
+        for plan in plans:
+            src = self.replica_by_rid(plan.src)
+            dst = self.replica_by_rid(plan.dst)
+            if src is None or dst is None or not dst.admitting:
                 continue
-            src = max(pool, key=eta)
-            dsts = [r for r in pool
-                    if r is not src and r.engine.free_slots > 0]
-            if not dsts:
+            units, _times = src.pack_slots([plan.slot])
+            self._harvest(src, now)   # the pack poll may complete slots
+            if not units:
                 continue
-            dst = min(dsts, key=eta)
-            if eta(src) <= self.rebalance_ratio * eta(dst) + 1e-9:
-                continue
-            costs = src.engine.slot_costs()
-            if not costs:
-                continue          # backlog is queue-only: router's job
-            slot, cost = max(costs, key=lambda sc: sc[1])
-            r_src = max(rates.get(src.rid, 1e-9), 1e-9)
-            r_dst = max(rates.get(dst.rid, 1e-9), 1e-9)
-            new_worst = max(
-                (src.engine.backlog_tokens() - cost) / r_src,
-                (dst.engine.backlog_tokens() + cost) / r_dst)
-            if new_worst >= eta(src):
-                continue          # move would not improve the worst ETA
-            snaps, _times = src.checkpoint_slots([slot])
-            self._harvest(src, now)   # snapshot poll may complete slots
-            if not snaps:
-                continue
-            for s in snaps:
-                self.metrics.on_migration(s.request.rid)
-            self.metrics.rebalance_migrations += len(snaps)
-            dst.restore(snaps)
-            self.log(now, f"rebalance req{snaps[0].request.rid} "
+            for u in units:
+                u.packed_t = now
+                self.metrics.on_migration(u.rid)
+            self.metrics.rebalance_migrations += len(units)
+            dst.unpack(units)
+            self.log(now, f"rebalance req{units[0].rid} "
                           f"r{src.rid} -> r{dst.rid}")
             self._kick(dst, now)
 

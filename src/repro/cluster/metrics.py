@@ -24,6 +24,7 @@ class RequestTrace:
     done_t: Optional[float] = None
     tokens: int = 0
     migrations: int = 0          # times this request was migrated
+    preemptions: int = 0         # times this request was paused mid-stream
     slo: str = "standard"        # SLO class name
     deadline_t: float = float("inf")   # absolute completion deadline
     model_id: str = "default"
@@ -44,6 +45,18 @@ class ReplicaStats:
     itype: str
     tokens: int = 0
     busy_s: float = 0.0          # virtual seconds with work in the engine
+    model_id: str = "default"    # pool this replica serves
+    cost_per_hour: float = 0.0   # dollars per virtual hour alive
+    launched_t: float = 0.0      # billing start (launch request time)
+    terminated_t: Optional[float] = None   # billing stop (None = alive)
+
+    def dollar_cost(self, horizon: float) -> float:
+        """Dollars accrued by ``horizon`` (virtual seconds) — a live
+        replica bills through the horizon, a retired one to its end."""
+        end = self.terminated_t if self.terminated_t is not None \
+            else horizon
+        return max(end - self.launched_t, 0.0) / 3600.0 \
+            * self.cost_per_hour
 
 
 @dataclasses.dataclass
@@ -54,6 +67,7 @@ class DrainRecord:
     queued_requeued: int
     checkpoint_s: float          # real (measured) store stage seconds
     restore_s: float = 0.0
+    endpoint: str = "host"       # MigrationEndpoint kind (host | device)
 
 
 class ClusterMetrics:
@@ -62,6 +76,9 @@ class ClusterMetrics:
         self.replicas: Dict[int, ReplicaStats] = {}
         self.drains: List[DrainRecord] = []
         self.rebalance_migrations = 0    # mid-stream (load) slot moves
+        self.preemptions = 0             # slots paused by the preemptor
+        self.resumes = 0                 # paused units re-admitted
+        self.preempt_stage_s = 0.0       # real store seconds spent pausing
 
     # ------------------------------------------------------------ request
     def on_submit(self, rid: int, now: float, *, slo: str = "standard",
@@ -80,15 +97,46 @@ class ClusterMetrics:
         if rid in self.traces:
             self.traces[rid].migrations += 1
 
+    def on_preempt(self, rid: int):
+        self.preemptions += 1
+        if rid in self.traces:
+            self.traces[rid].preemptions += 1
+
+    def on_resume(self, rid: int):
+        self.resumes += 1
+
     # ------------------------------------------------------------ replica
-    def ensure_replica(self, rid: int, itype: str):
+    def on_launch(self, rid: int, itype: str, *,
+                  model_id: str = "default", cost_per_hour: float = 0.0,
+                  t: float = 0.0):
+        """Start a replica's meter: billing runs from the launch request
+        until termination (or the summary horizon while alive)."""
         if rid not in self.replicas:
-            self.replicas[rid] = ReplicaStats(rid, itype)
+            self.replicas[rid] = ReplicaStats(
+                rid, itype, model_id=model_id,
+                cost_per_hour=cost_per_hour, launched_t=t)
+
+    def on_terminate(self, rid: int, now: float):
+        st = self.replicas.get(rid)
+        if st is not None and st.terminated_t is None:
+            st.terminated_t = now
 
     def on_tokens(self, rid: int, tokens: int, busy_s: float):
         st = self.replicas[rid]
         st.tokens += tokens
         st.busy_s += busy_s
+
+    # --------------------------------------------------------------- cost
+    def pool_dollar_cost(self, horizon: float) -> Dict[str, float]:
+        """Per-model-pool fleet dollars accrued by ``horizon``."""
+        out: Dict[str, float] = {}
+        for st in self.replicas.values():
+            out[st.model_id] = out.get(st.model_id, 0.0) \
+                + st.dollar_cost(horizon)
+        return out
+
+    def fleet_dollar_cost(self, horizon: float) -> float:
+        return sum(self.pool_dollar_cost(horizon).values())
 
     # ------------------------------------------------------------ summary
     def latencies(self, slo: Optional[str] = None) -> np.ndarray:
@@ -161,9 +209,17 @@ class ClusterMetrics:
             "migrated_slots": sum(d.slots_migrated for d in self.drains),
             "drains": len(self.drains),
             "rebalance_migrations": self.rebalance_migrations,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "preempt_stage_s": self.preempt_stage_s,
             "interruption_overhead_s": sum(
                 d.checkpoint_s + d.restore_s for d in self.drains),
+            # fleet dollars through the completion horizon (per-pool
+            # figures follow; single-pool fleets just get one entry)
+            "fleet_dollar_cost": self.fleet_dollar_cost(now),
         }
+        for pool, cost in sorted(self.pool_dollar_cost(now).items()):
+            out[f"dollar_cost_{pool}"] = cost
         # per-SLO-class attainment + tail latency (only when classed
         # traffic was offered, so class-less runs keep the old summary)
         for slo in self.slo_classes():

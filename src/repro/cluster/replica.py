@@ -2,14 +2,20 @@
 
 The cluster maps the paper's runtime objects onto serving (§III/§IV):
 replicas are PEs with *measured* heterogeneous rates; in-flight requests
-are migratable chares.  Each replica wraps an engine with
+are migratable chares (``WorkUnit``s).  Each replica wraps an engine with
 
-* an ``InstanceType`` (the EC2-flavor analogue: relative speed, spot flag),
+* an ``InstanceType`` (the EC2-flavor analogue: relative speed, spot
+  flag, dollar cost per hour, accelerator flag),
 * a feed into the shared ``RateMonitor`` — measured tokens/sec, never
   ground-truth speed, so stragglers and jitter are handled identically,
-* checkpointable slot state: a drain checkpoints every in-flight slot
-  through an ``InMemoryStore`` (the §II-B shm substrate) and hands the
-  snapshots back for re-admission elsewhere.
+* one PUP-style verb set over in-flight work: ``pack_slots``/``unpack``
+  (migration), ``preempt``/``resume`` (SLO-aware pausing), and
+  ``drain_units`` (spot-drain/retirement).  Every verb that releases
+  work stages the payload through the replica's ``MigrationEndpoint``
+  — host-RAM (``InMemoryStore``) for plain instances, device-resident
+  (``DeviceStore``) when ``InstanceType.accelerator`` is set — so the
+  §IV checkpoint/restore stages are exercised and timed on the store
+  class that host would really use.
 
 Virtual-time pacing is *message-driven*: each replica schedules its own
 next ``replica_step`` event on the shared ``EventLoop``.  One event runs
@@ -28,12 +34,17 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
 from repro.core.rates import RateMonitor
 from repro.serving.engine import Request, ServingEngine, SlotSnapshot
+from repro.serving.workunit import WorkUnit
+
+from repro.cluster.endpoint import (DeviceEndpoint, HostEndpoint,
+                                    MigrationEndpoint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +53,8 @@ class InstanceType:
     speed: float                 # engine steps per virtual second
     spot: bool = True
     model_id: str = "default"    # model pool this instance serves
+    cost_per_hour: float = 1.0   # dollar cost per virtual hour alive
+    accelerator: bool = False    # drains stage through DeviceStore
 
 
 class ReplicaState(enum.Enum):
@@ -52,6 +65,12 @@ class ReplicaState(enum.Enum):
     TERMINATED = "terminated"
 
 
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"Replica.{old} is deprecated; use the WorkUnit verb {new} instead",
+        DeprecationWarning, stacklevel=3)
+
+
 class Replica:
     def __init__(self, rid: int, cfg: ModelConfig, params,
                  itype: InstanceType, *, batch_size: int = 2,
@@ -59,7 +78,8 @@ class Replica:
                  monitor: Optional[RateMonitor] = None,
                  store: Optional[InMemoryStore] = None,
                  ready_at: float = 0.0, seed: int = 0,
-                 decode_block: int = 4, prefill_mode: str = "chunked"):
+                 decode_block: int = 4, prefill_mode: str = "chunked",
+                 endpoint: Optional[MigrationEndpoint] = None):
         self.rid = rid
         self.itype = itype
         self.decode_block = max(int(decode_block), 1)
@@ -71,6 +91,15 @@ class Replica:
                                     decode_block=self.decode_block)
         self.monitor = monitor
         self.store = store or InMemoryStore()
+        # migration staging: accelerator hosts keep the round trip
+        # device-resident (HBM-to-HBM); plain hosts stage through the
+        # shared host-RAM store
+        if endpoint is not None:
+            self.endpoint = endpoint
+        elif itype.accelerator:
+            self.endpoint = DeviceEndpoint()
+        else:
+            self.endpoint = HostEndpoint(self.store)
         self.ready_at = ready_at
         self.state = ReplicaState.LAUNCHING if ready_at > 0 \
             else ReplicaState.RUNNING
@@ -142,52 +171,74 @@ class Replica:
         assert self.serving, self.state
         self.engine.submit(req)
 
-    def restore(self, snaps: List[SlotSnapshot]):
+    # ---------------------------------------------------- WorkUnit verbs
+    def pack_slots(self, slots: Optional[List[int]] = None
+                   ) -> Tuple[List[WorkUnit], Tuple[float, float]]:
+        """Mid-stream migration: pack selected in-flight slots and
+        release them, while the replica keeps serving everything else —
+        the Charm++ migratable-chare move applied for *load*, not just
+        spot-drain.  Payloads stage through this replica's endpoint;
+        returns (units, (checkpoint_s, restore_s))."""
+        units = self.engine.pack(slots)
+        times = self._stage(units, f"migrate_r{self.rid}")
+        return units, times
+
+    def unpack(self, units: List[WorkUnit]):
+        """Admit packed units (migration landing / preemption resume)."""
         assert self.serving, self.state
-        self.engine.restore_slots(snaps)
+        self.engine.unpack(units)
 
-    # ---------------------------------------------------- migration/drain
-    def _store_roundtrip(self, snaps: List[SlotSnapshot],
-                         name: str) -> Tuple[float, float]:
-        """Round-trip snapshot caches through ``InMemoryStore`` so the
-        §IV checkpoint/restore stages are actually exercised and timed,
-        not assumed.  Returns real (checkpoint_s, restore_s)."""
-        if not snaps:
-            return 0.0, 0.0
-        import numpy as np
-        ck0 = self.store.timer.stages.get("checkpoint", 0.0)
-        rs0 = self.store.timer.stages.get("restore", 0.0)
-        self.store.save(name, [s.cache for s in snaps])
-        caches = self.store.restore(name)
-        ckpt_s = self.store.timer.stages["checkpoint"] - ck0
-        restore_s = self.store.timer.stages["restore"] - rs0
-        for s, c in zip(snaps, caches):
-            s.cache = {k: np.asarray(v) for k, v in c.items()}
-        self.store.drop(name)
-        return ckpt_s, restore_s
+    def preempt(self, slots: List[int]
+                ) -> Tuple[List[WorkUnit], Tuple[float, float]]:
+        """Pause in-flight slots (slot freed, snapshot retained): the
+        SLO-aware preemption primitive.  Units come back PAUSED and stay
+        parked until a ``resume`` re-admits them somewhere."""
+        units = self.engine.preempt(slots)
+        times = self._stage(units, f"preempt_r{self.rid}")
+        return units, times
 
+    def resume(self, units: List[WorkUnit]):
+        """Re-admit paused units; the stream continues bit-identically."""
+        assert self.serving, self.state
+        self.engine.resume(units)
+
+    def drain_units(self) -> Tuple[List[WorkUnit], List[Request],
+                                   Tuple[float, float]]:
+        """Pack ALL in-flight work through the endpoint and empty the
+        engine.  Returns (units, untouched queued requests,
+        (checkpoint_s, restore_s))."""
+        self.state = ReplicaState.DRAINING
+        units, queued = self.engine.drain_units()
+        times = self._stage(units, f"drain_r{self.rid}")
+        return units, queued, times
+
+    def _stage(self, units: List[WorkUnit], name: str
+               ) -> Tuple[float, float]:
+        for u in units:
+            if u.origin is None:
+                u.origin = self.rid
+        return self.endpoint.roundtrip(units, name)
+
+    # ------------------------------------------------- deprecated verbs
     def checkpoint_slots(self, slots: List[int]
                          ) -> Tuple[List[SlotSnapshot],
                                     Tuple[float, float]]:
-        """Mid-stream migration: checkpoint selected in-flight slots and
-        release them, while the replica keeps serving everything else —
-        the Charm++ migratable-chare move applied for *load*, not just
-        spot-drain."""
-        snaps = self.engine.snapshot_slots(slots=slots)
-        times = self._store_roundtrip(snaps, f"migrate_r{self.rid}")
-        return snaps, times
+        """Deprecated: use ``pack_slots(slots)`` (returns WorkUnits)."""
+        _deprecated("checkpoint_slots", "pack_slots")
+        units, times = self.pack_slots(slots)
+        return [u.snapshot for u in units], times
+
+    def restore(self, snaps: List[SlotSnapshot]):
+        """Deprecated: use ``unpack(units)``."""
+        _deprecated("restore", "unpack")
+        self.unpack([WorkUnit(snapshot=s) for s in snaps])
 
     def drain(self) -> Tuple[List[SlotSnapshot], List[Request],
                              Tuple[float, float]]:
-        """Checkpoint in-flight slots through the store and empty the engine.
-
-        Returns (snapshots, untouched queued requests, (checkpoint_s,
-        restore_s)).
-        """
-        self.state = ReplicaState.DRAINING
-        snaps, queued = self.engine.drain()
-        times = self._store_roundtrip(snaps, f"drain_r{self.rid}")
-        return snaps, queued, times
+        """Deprecated: use ``drain_units()`` (returns WorkUnits)."""
+        _deprecated("drain", "drain_units")
+        units, queued, times = self.drain_units()
+        return [u.snapshot for u in units], queued, times
 
     def terminate(self):
         self.state = ReplicaState.TERMINATED

@@ -36,6 +36,7 @@ from repro.core.loadbalance import greedy_refine
 from repro.serving.engine import (DEFAULT_PREFILL_DISCOUNT, Request,
                                   request_cost)
 
+from repro.cluster.control import ClusterView, PlacementPolicy
 from repro.cluster.replica import Replica
 
 
@@ -48,8 +49,14 @@ def _pools(replicas: Sequence[Replica]) -> Dict[str, List[Replica]]:
     return pools
 
 
-class Router:
-    """Base: global admission queue; subclasses decide placement."""
+class Router(PlacementPolicy):
+    """Base: global admission queue; subclasses decide placement.
+
+    Routers ARE the cluster's ``PlacementPolicy``: ``place`` adapts the
+    historical ``dispatch(replicas, rates, now)`` signature to the
+    control-plane ``ClusterView``, and the mid-stream ``rebalance``
+    decision comes from the policy base class.
+    """
 
     name = "base"
 
@@ -62,6 +69,9 @@ class Router:
     def requeue(self, reqs: Sequence[Request]):
         """Drained (checkpoint-free) requests come back to the front."""
         self.queue = list(reqs) + self.queue
+
+    def place(self, view: ClusterView, now: float) -> List[Replica]:
+        return self.dispatch(list(view.replicas), view.rates(), now)
 
     def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
                  now: float = 0.0) -> List[Replica]:

@@ -34,18 +34,23 @@ def _make_requests(args, cfg):
 
 
 def _parse_fleet(spec: str):
-    """'2x2.0,2x0.7' -> two speed-2.0 replicas + two speed-0.7 replicas."""
+    """'2x2.0,2x0.7@0.5' -> two speed-2.0 replicas at the default $1/h +
+    two speed-0.7 replicas at $0.50/h (cost feeds the dollar metrics and
+    cost-aware scaling)."""
     from repro.cluster import InstanceType
     fleet = []
     try:
         for part in spec.split(","):
             count, speed = part.split("x")
+            speed, _, cost = speed.partition("@")
             for _ in range(int(count)):
-                fleet.append(InstanceType(f"spot.{speed}x", float(speed)))
+                fleet.append(InstanceType(
+                    f"spot.{speed}x", float(speed),
+                    cost_per_hour=float(cost) if cost else 1.0))
     except ValueError:
         raise SystemExit(
-            f"bad --fleet spec {spec!r}: expected '<count>x<speed>,...' "
-            f"like '2x2.0,2x0.7'")
+            f"bad --fleet spec {spec!r}: expected "
+            f"'<count>x<speed>[@<cost_per_hour>],...' like '2x2.0,2x0.7@0.5'")
     if not fleet:
         raise SystemExit("--fleet spec produced an empty fleet")
     return fleet
@@ -68,8 +73,17 @@ def run_single(args, cfg, params):
 
 
 def run_cluster(args, cfg, params):
-    from repro.cluster import ROUTERS, ServingCluster
-    cl = ServingCluster(cfg, params, _parse_fleet(args.fleet),
+    from repro.cluster import (PREEMPTION_POLICIES, ROUTERS,
+                               SCALING_POLICIES, ServingCluster)
+    fleet = _parse_fleet(args.fleet)
+    preemption = PREEMPTION_POLICIES[args.preemption]() \
+        if args.preemption != "none" else None
+    scaling = None
+    if args.scaling == "cost_aware":
+        # the catalog is the set of distinct instance types in the fleet
+        catalog = sorted({it for it in fleet}, key=lambda it: it.name)
+        scaling = SCALING_POLICIES["cost_aware"](catalog)
+    cl = ServingCluster(cfg, params, fleet,
                         router=ROUTERS[args.router](),
                         batch_size=args.batch_size, max_seq=args.max_seq,
                         temperature=args.temperature,
@@ -79,7 +93,8 @@ def run_cluster(args, cfg, params):
                         rebalance_lead=args.rebalance_lead,
                         notice_deadline=args.notice_deadline,
                         admission=args.admission,
-                        rebalance_interval=args.migrate_every)
+                        rebalance_interval=args.migrate_every,
+                        preemption=preemption, scaling=scaling)
     from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
     cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
@@ -100,6 +115,10 @@ def run_cluster(args, cfg, params):
               f"{out['interruption_overhead_s']*1e3:.1f}ms")
     if out["rebalance_migrations"]:
         print(f"  rebalance_migrations={out['rebalance_migrations']}")
+    if out["preemptions"]:
+        print(f"  preemptions={out['preemptions']} "
+              f"resumes={out['resumes']}")
+    print(f"  fleet_dollar_cost=${out['fleet_dollar_cost']:.4f}")
     for k in sorted(out):
         if k.startswith("attainment_"):
             slo = k[len("attainment_"):]
@@ -141,6 +160,15 @@ def main():
                     choices=("fifo", "priority"),
                     help="priority holds batch-class arrivals until the "
                          "fleet has backlog headroom")
+    ap.add_argument("--preemption", default="none",
+                    choices=("none", "slo"),
+                    help="slo pauses batch-class slots (WorkUnit "
+                         "preempt/resume) when waiting interactive work "
+                         "would miss its deadline")
+    ap.add_argument("--scaling", default="backlog",
+                    choices=("backlog", "cost_aware"),
+                    help="cost_aware shops the fleet's instance types by "
+                         "speed per dollar on every scale-up/replacement")
     ap.add_argument("--slo-mix", type=float, default=None,
                     help="serve an interactive/batch SLO mix with this "
                          "interactive fraction (default: class-less)")

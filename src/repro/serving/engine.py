@@ -27,18 +27,22 @@ The hot path is built around three properties:
   ``maxfed``), so steady-state decode performs **zero device->host
   transfers**; ``out_buf`` is fetched only when the projection says a
   slot completed, or at a drain.  ``host_syncs`` counts every fetch.
-* **Checkpointable slots** — ``snapshot_slots()`` captures each occupied
-  slot (request progress + that slot's KV/state cache columns) as host
-  arrays; ``restore_slots()`` admits snapshots into any engine built from
-  the same ``(cfg, max_seq)`` — including mid-prefill-chunk.  This is the
-  migration substrate for the cluster's spot-instance drain (paper §IV
-  Mode C applied to serving).
+* **Migratable work units** — ``pack()`` captures each occupied slot
+  (request progress + that slot's KV/state cache columns, as host
+  arrays) into a self-contained ``WorkUnit``; ``unpack()`` admits units
+  into any engine built from the same ``(cfg, max_seq)`` — including
+  mid-prefill-chunk.  ``preempt()``/``resume()`` are the same checkpoint
+  under pause semantics (slot freed, snapshot retained, bit-identical
+  stream on resume).  This one PUP-style verb set is the substrate for
+  every control-plane move: spot-drain, mid-stream rebalancing, and
+  SLO-aware preemption (paper §III–IV applied to serving).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -83,6 +87,12 @@ class Request:
         if self.slo is None or self.arrival_t is None:
             return default
         return self.arrival_t + self.slo.deadline
+
+
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"{old} is deprecated; use the WorkUnit verb {new} instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def request_cost(req: Request,
@@ -186,6 +196,8 @@ class ServingEngine:
         self.processed_tokens = 0   # prefill + decode work units (rate feed)
         self.host_syncs = 0         # device->host fetches (poll/drain only)
         self.chunk_prefills = 0     # bulk prefill dispatches issued
+        self.preemptions = 0        # slots paused via preempt()
+        self.resumes = 0            # paused units re-admitted via resume()
         self._chunk_tokens_pending = 0
         if prefill_mode == "chunked" and cfg.family in zoo.BULK_PREFILL_FAMILIES:
             self._buckets = tuple(sorted(
@@ -234,6 +246,15 @@ class ServingEngine:
     def fed_tokens(self, slot: int) -> int:
         """Tokens already in ``slot``'s cache (exact, no device sync)."""
         return int(self._fed[slot])
+
+    def queued_requests(self) -> Tuple[Request, ...]:
+        """Accepted-but-unadmitted requests (control-plane visibility)."""
+        return tuple(self._queue)
+
+    def slot_requests(self) -> List[Tuple[int, Request]]:
+        """Per occupied slot: (slot, request) — the preemptor's victim
+        candidates, alongside ``slot_costs`` for their remaining load."""
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
 
     def backlog_tokens(self) -> float:
         """Remaining load across slots + queue (the router's signal).
@@ -471,16 +492,22 @@ class ServingEngine:
                 self._completed.append(req)
                 self._slots[slot] = None
 
-    # --------------------------------------------------------- checkpointing
-    def snapshot_slots(self, slots: Optional[List[int]] = None
-                       ) -> List[SlotSnapshot]:
-        """Checkpoint and release occupied slots (drain semantics).
+    # ----------------------------------------------- WorkUnit pack/unpack
+    #
+    # One verb set for every in-flight-request move (the paper's PUP
+    # interface): ``pack``/``unpack`` for migration and drain,
+    # ``preempt``/``resume`` for SLO-aware pausing.  The old
+    # snapshot_slots/restore_slots/drain names are deprecated shims.
+
+    def _snapshot_slots(self, slots: Optional[List[int]] = None
+                        ) -> List[SlotSnapshot]:
+        """Checkpoint and release occupied slots (the PUP 'pack' step).
 
         ``slots`` restricts the checkpoint to a subset (the rebalancer's
-        mid-stream migration picks single victims); None takes every
-        occupied slot.  Works at any point in a request's life —
-        including right after a bulk prefill chunk, before the prompt is
-        fully fed.
+        mid-stream migration and the preemptor pick single victims);
+        None takes every occupied slot.  Works at any point in a
+        request's life — including right after a bulk prefill chunk,
+        before the prompt is fully fed.
         """
         self._poll()
         occupied = [i for i, r in enumerate(self._slots)
@@ -505,14 +532,77 @@ class ServingEngine:
         self.sample = self.sample._replace(active=deactivate)
         return snaps
 
+    def pack(self, slots: Optional[List[int]] = None) -> List["WorkUnit"]:
+        """Checkpoint + release occupied slots as migratable ``WorkUnit``s.
+
+        A packed unit is self-contained: ``unpack`` admits it into any
+        engine built from the same ``(cfg, max_seq)`` and the greedy
+        stream continues bit-identically.
+        """
+        from repro.serving.workunit import WorkUnit
+        return [WorkUnit(snapshot=s) for s in self._snapshot_slots(slots)]
+
+    def unpack(self, units: List["WorkUnit"]):
+        """Queue packed units for admission (cache written on admit).
+
+        Unpacked units are admitted into free slots ahead of fresh
+        queued requests, so migrated/resumed work never starves behind
+        new arrivals.
+        """
+        for u in units:
+            u.hops += 1
+            self._restore.append(u.snapshot)
+
+    def preempt(self, slots: Optional[List[int]] = None) -> List["WorkUnit"]:
+        """Pause slots mid-stream: slot freed, snapshot retained.
+
+        Mechanically a ``pack``, but the units come back ``PAUSED`` —
+        parked by a preemption policy to free capacity for more urgent
+        work, not in transit to another host.  ``resume`` continues the
+        decoded stream bit-identically (asserted in tests).
+        """
+        from repro.serving.workunit import PAUSED
+        units = self.pack(slots)
+        for u in units:
+            u.state = PAUSED
+        self.preemptions += len(units)
+        return units
+
+    def resume(self, units: List["WorkUnit"]):
+        """Re-admit paused units (the other half of ``preempt``)."""
+        from repro.serving.workunit import PACKED
+        for u in units:
+            u.state = PACKED
+        self.resumes += len(units)
+        self.unpack(units)
+
+    def drain_units(self) -> Tuple[List["WorkUnit"], List[Request]]:
+        """Empty the engine: packed in-flight work + the untouched queue.
+
+        Not-yet-admitted units waiting in the restore queue ride along
+        (re-wrapped), so a drained engine hands back everything it owned.
+        """
+        from repro.serving.workunit import WorkUnit
+        units = self.pack()
+        units.extend(WorkUnit(snapshot=s) for s in self._restore)
+        self._restore = []
+        queued, self._queue = self._queue, []
+        return units, queued
+
+    # ------------------------------------------------- deprecated verbs
+    def snapshot_slots(self, slots: Optional[List[int]] = None
+                       ) -> List[SlotSnapshot]:
+        """Deprecated: use ``pack(slots)`` (returns ``WorkUnit``s)."""
+        _deprecated("snapshot_slots", "pack")
+        return [u.snapshot for u in self.pack(slots)]
+
     def restore_slots(self, snapshots: List[SlotSnapshot]):
-        """Queue checkpointed slots for admission (cache written on admit)."""
+        """Deprecated: use ``unpack(units)``."""
+        _deprecated("restore_slots", "unpack")
         self._restore.extend(snapshots)
 
     def drain(self) -> Tuple[List[SlotSnapshot], List[Request]]:
-        """Empty the engine: checkpoints of in-flight work + untouched queue."""
-        snaps = self.snapshot_slots()
-        snaps.extend(self._restore)
-        self._restore = []
-        queued, self._queue = self._queue, []
-        return snaps, queued
+        """Deprecated: use ``drain_units()`` (returns ``WorkUnit``s)."""
+        _deprecated("drain", "drain_units")
+        units, queued = self.drain_units()
+        return [u.snapshot for u in units], queued

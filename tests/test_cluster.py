@@ -166,10 +166,10 @@ def test_engine_snapshot_restore_exact(model):
     e1.submit(r1)
     for _ in range(4):          # prompt bulk-prefilled on admit, then decode
         e1.step()
-    snaps, queued = e1.drain()
-    assert len(snaps) == 1 and not queued
+    units, queued = e1.drain_units()
+    assert len(units) == 1 and not queued
     assert 0 < len(r1.out_tokens) < r1.max_new_tokens
     e2 = ServingEngine(cfg, params, batch_size=2, max_seq=32)
-    e2.restore_slots(snaps)
+    e2.unpack(units)
     e2.run_until_idle()
     assert r1.done and r1.out_tokens == r0.out_tokens

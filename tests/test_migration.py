@@ -50,7 +50,7 @@ def _reference_tokens(cfg, params, prompt, max_new):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_migrate_mid_decode_bit_identical(models, arch):
-    """checkpoint_slots mid-generation -> restore on another replica."""
+    """pack_slots mid-generation -> unpack on another replica."""
     cfg, params = models[arch]
     prompt = _prompt(cfg, 12, seed=1)
     ref = _reference_tokens(cfg, params, prompt, max_new=12)
@@ -64,14 +64,15 @@ def test_migrate_mid_decode_bit_identical(models, arch):
     # stays empty until a poll — progress lives in the host projection)
     assert len(prompt) < src.engine.fed_tokens(0) < len(prompt) + 11
     occupied = [s for s, _ in src.engine.slot_costs()]
-    snaps, (ckpt_s, restore_s) = src.checkpoint_slots(occupied[:1])
-    assert len(snaps) == 1
-    assert 0 < len(req.out_tokens) < 12     # snapshot poll materialized
+    units, (ckpt_s, restore_s) = src.pack_slots(occupied[:1])
+    assert len(units) == 1
+    assert units[0].residency == "host"     # staged through the endpoint
+    assert 0 < len(req.out_tokens) < 12     # pack poll materialized
     assert ckpt_s >= 0.0 and restore_s >= 0.0   # store stages exercised
     assert src.engine.n_active == 0     # slot released on the source
 
     dst = _replica(cfg, params, 1)
-    dst.restore(snaps)
+    dst.unpack(units)
     while dst.has_work():
         dst.step_once(now=0.0)
     dst.engine.pop_completed()
@@ -96,12 +97,12 @@ def test_migrate_mid_prefill_chunk_bit_identical(models, arch):
     eng.step()                          # admit: one 16-token chunk + 1 step
     assert eng.chunk_prefills == 1
     assert eng.fed_tokens(0) < len(prompt) - 1   # still mid-prefill
-    snaps = eng.snapshot_slots()
-    assert len(snaps) == 1 and snaps[0].fed < len(prompt)
+    units = eng.pack()
+    assert len(units) == 1 and units[0].progress < len(prompt)
     assert req.out_tokens == []
 
     dst = _replica(cfg, params, 1)
-    dst.restore(snaps)
+    dst.unpack(units)
     while dst.has_work():
         dst.step_once(now=0.0)
     dst.engine.pop_completed()
@@ -124,18 +125,19 @@ def test_double_migration_bit_identical(models, arch):
     req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=10)
     src.submit(req)
     src.step_once(now=0.0)              # hop 1: mid-prefill
-    snaps, _ = src.checkpoint_slots([s for s, _ in
-                                     src.engine.slot_costs()])
+    units, _ = src.pack_slots([s for s, _ in
+                                   src.engine.slot_costs()])
     mid = _replica(cfg, params, 1)
-    mid.restore(snaps)
+    mid.unpack(units)
     while mid.engine.fed_tokens(0) <= len(prompt):  # cross into decode
         mid.step_once(now=0.0)
     assert mid.engine.fed_tokens(0) > len(prompt)   # hop 2: mid-decode
-    snaps, _ = mid.checkpoint_slots([s for s, _ in
-                                     mid.engine.slot_costs()])
+    units, _ = mid.pack_slots([s for s, _ in
+                                   mid.engine.slot_costs()])
+    assert all(u.residency == "host" for u in units)
     assert 0 < len(req.out_tokens) < 10
     dst = _replica(cfg, params, 2)
-    dst.restore(snaps)
+    dst.unpack(units)
     while dst.has_work():
         dst.step_once(now=0.0)
     dst.engine.pop_completed()
@@ -144,7 +146,7 @@ def test_double_migration_bit_identical(models, arch):
 
 
 def test_selective_snapshot_leaves_other_slots_running(models):
-    """checkpoint_slots([victim]) must not disturb the co-resident slot:
+    """pack_slots([victim]) must not disturb the co-resident slot:
     it keeps decoding on the source to its reference continuation."""
     cfg, params = models["granite-8b"]
     p0, p1 = _prompt(cfg, 6, seed=4), _prompt(cfg, 6, seed=5)
@@ -161,12 +163,12 @@ def test_selective_snapshot_leaves_other_slots_running(models):
     assert src.engine.n_active == 2
     victim = [s for s, _ in src.engine.slot_costs()
               if src.engine._slots[s].rid == 0]
-    snaps, _ = src.checkpoint_slots(victim)
-    assert [s.request.rid for s in snaps] == [0]
+    units, _ = src.pack_slots(victim)
+    assert [u.rid for u in units] == [0]
     assert src.engine.n_active == 1     # r1 still in place
 
     dst = _replica(cfg, params, 1)
-    dst.restore(snaps)
+    dst.unpack(units)
     while dst.has_work():
         dst.step_once(now=0.0)
     while src.has_work():

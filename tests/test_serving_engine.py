@@ -82,7 +82,7 @@ def test_bulk_prefill_cache_matches_streamed_cache(model):
         # stop right after the prompt is fully in the cache
         while eng.fed_tokens(0) < len(prompt):
             eng.step()
-        snaps[mode] = eng.drain()[0][0]
+        snaps[mode] = eng.drain_units()[0][0].snapshot
     a, b = snaps["streamed"], snaps["chunked"]
     assert a.fed == b.fed and a.next_tok == b.next_tok
     for k in a.cache:
@@ -129,14 +129,14 @@ def test_snapshot_mid_prefill_chunk_resumes_identically(model):
     eng.step()                          # admit: bulk chunk of 16 + 1 step
     assert eng.chunk_prefills == 1
     assert eng.fed_tokens(0) < len(prompt) - 1     # still mid-prefill
-    snaps, queued = eng.drain()
-    assert len(snaps) == 1 and not queued
-    assert snaps[0].fed < len(prompt)   # checkpointed mid-prompt
+    units, queued = eng.drain_units()
+    assert len(units) == 1 and not queued
+    assert units[0].progress < len(prompt)   # packed mid-prompt
     assert req.out_tokens == []
 
     other = ServingEngine(cfg, params, batch_size=2, max_seq=96,
                           prefill_mode="chunked")
-    other.restore_slots(snaps)
+    other.unpack(units)
     other.run_until_idle()
     assert req.done
     assert req.out_tokens == ref[0].out_tokens

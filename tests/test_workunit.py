@@ -1,0 +1,381 @@
+"""WorkUnit lifecycle + ControlPlane policy tests.
+
+The PR-5 tentpole invariants:
+
+* **One verb set** — pack/unpack/preempt/resume are the only migration
+  primitives; ANY interleaving of them round-trips to a bit-identical
+  greedy token stream (deterministic cases for causal + ssm, mid-decode
+  and mid-prefill-chunk, plus a hypothesis property over random
+  interleavings).
+* **Deprecation** — the old snapshot_slots/restore_slots/
+  checkpoint_slots/drain names still work but warn.
+* **Endpoints** — migration payloads stage through the replica's
+  ``MigrationEndpoint``; accelerator instances stage device-resident.
+* **Policies** — SLO preemption frees batch slots for urgent interactive
+  work (and resumes losslessly); cost-aware scaling shops the catalog by
+  price-performance; per-replica dollar metering adds up.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (BacklogScaling, ClusterMetrics, CostAwareScaling,
+                           DeviceEndpoint, HostEndpoint, InstanceType,
+                           Replica, ServingCluster, SLOPreemption)
+from repro.configs import get_config
+from repro.models import model_zoo as zoo
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.workload import SLOClass
+from repro.serving.workunit import PACKED, PAUSED
+
+from tests._hypothesis_compat import given, settings, st
+
+ARCHS = ["granite-8b", "mamba2-780m"]     # causal + ssm families
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        out[arch] = (cfg,
+                     zoo.init_state(cfg, jax.random.PRNGKey(0)).params)
+    return out
+
+
+def _prompt(cfg, n, seed):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n, dtype=np.int32)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("max_seq", 64)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _reference_tokens(cfg, params, prompt, max_new):
+    eng = _engine(cfg, params)
+    req = Request(rid=99, prompt=prompt.copy(), max_new_tokens=max_new)
+    eng.submit(req)
+    eng.run_until_idle()
+    assert req.done
+    return req.out_tokens
+
+
+# --------------------------------------------------- preempt/resume
+@pytest.mark.parametrize("arch", ARCHS)
+def test_preempt_resume_mid_decode_bit_identical(models, arch):
+    """Pause a slot mid-generation; the resumed stream (on a DIFFERENT
+    engine) matches the uninterrupted reference exactly."""
+    cfg, params = models[arch]
+    prompt = _prompt(cfg, 12, seed=1)
+    ref = _reference_tokens(cfg, params, prompt, max_new=12)
+
+    eng = _engine(cfg, params)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=12)
+    eng.submit(req)
+    while eng.fed_tokens(0) <= len(prompt):      # cross into decode
+        eng.step()
+    units = eng.preempt()
+    assert len(units) == 1
+    u = units[0]
+    assert u.state == PAUSED
+    assert eng.preemptions == 1
+    assert eng.n_active == 0                     # slot freed
+    assert len(prompt) < u.progress < len(prompt) + 11   # mid-decode
+
+    other = _engine(cfg, params)
+    other.resume(units)
+    assert u.state == PACKED and other.resumes == 1
+    other.run_until_idle()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_preempt_resume_mid_prefill_chunk_bit_identical(models, arch):
+    """Preempt right after the bulk prefill chunk, before the prompt is
+    fully fed; the resumed continuation is still exact."""
+    cfg, params = models[arch]
+    prompt = _prompt(cfg, 30, seed=2)
+    ref = _reference_tokens(cfg, params, prompt, max_new=8)
+
+    eng = _engine(cfg, params, prefill_buckets=(16,))
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    eng.submit(req)
+    eng.step()                   # admit: one 16-token chunk + 1 step
+    assert eng.chunk_prefills == 1
+    assert eng.fed_tokens(0) < len(prompt) - 1   # still mid-prefill
+    units = eng.preempt()
+    assert len(units) == 1 and units[0].progress < len(prompt)
+    assert req.out_tokens == []
+
+    other = _engine(cfg, params)
+    other.resume(units)
+    other.run_until_idle()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+def test_workunit_metadata(models):
+    """Identity, SLO class, measured progress, and load accounting ride
+    the unit across a pack -> unpack hop."""
+    cfg, params = models["granite-8b"]
+    eng = _engine(cfg, params)
+    slo = SLOClass("batch", 2, deadline=100.0, admit_lazily=True)
+    req = Request(rid=7, prompt=_prompt(cfg, 6, seed=3),
+                  max_new_tokens=10, slo=slo)
+    eng.submit(req)
+    for _ in range(3):
+        eng.step()
+    (u,) = eng.pack()
+    assert u.state == PACKED and u.rid == 7
+    assert u.slo_name == "batch" and u.preemptible
+    assert u.progress == u.snapshot.fed > 0
+    assert u.remaining_cost() > 0
+    assert u.hops == 0
+    other = _engine(cfg, params)
+    other.unpack([u])
+    assert u.hops == 1
+    uids = [w.uid for w in (u, *other.pack())]
+    assert len(set(uids)) == len(uids)       # identities never collide
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 3),
+                              st.sampled_from(["pack", "preempt"])),
+                    min_size=1, max_size=4))
+@settings(max_examples=8, deadline=None)
+def test_any_interleaving_roundtrips_identically(models, ops):
+    """Property: an arbitrary interleaving of run/pack/unpack/preempt/
+    resume hops between two engines reproduces the reference stream."""
+    cfg, params = models["granite-8b"]
+    prompt = _prompt(cfg, 10, seed=4)
+    ref = _reference_tokens(cfg, params, prompt, max_new=10)
+
+    engines = [_engine(cfg, params), _engine(cfg, params)]
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=10)
+    cur = 0
+    engines[cur].submit(req)
+    for steps, verb in ops:
+        for _ in range(steps):
+            engines[cur].step()
+        if req.done:
+            break
+        units = (engines[cur].preempt() if verb == "preempt"
+                 else engines[cur].pack())
+        nxt = 1 - cur
+        if verb == "preempt":
+            engines[nxt].resume(units)
+        else:
+            engines[nxt].unpack(units)
+        cur = nxt
+    for _ in range(200):
+        if req.done:
+            break
+        engines[cur].step()
+    engines[cur].pop_completed()
+    assert req.done
+    assert req.out_tokens == ref
+
+
+# ------------------------------------------------------- deprecation
+def test_deprecated_verbs_warn(models):
+    """snapshot_slots/restore_slots/drain (engine) and checkpoint_slots/
+    restore/drain (replica) still work as thin wrappers, but warn."""
+    cfg, params = models["granite-8b"]
+    eng = _engine(cfg, params)
+    req = Request(rid=0, prompt=_prompt(cfg, 5, seed=5),
+                  max_new_tokens=6)
+    eng.submit(req)
+    eng.step()
+    with pytest.warns(DeprecationWarning, match="pack"):
+        snaps = eng.snapshot_slots()
+    assert len(snaps) == 1
+    with pytest.warns(DeprecationWarning, match="unpack"):
+        eng.restore_slots(snaps)
+    eng.step()
+    with pytest.warns(DeprecationWarning, match="drain_units"):
+        snaps, queued = eng.drain()
+    assert len(snaps) == 1 and not queued
+
+    rep = Replica(0, cfg, params, InstanceType("r0", 1.0),
+                  batch_size=2, max_seq=64)
+    with pytest.warns(DeprecationWarning, match="unpack"):
+        rep.restore(snaps)
+    rep.step_once(now=0.0)
+    with pytest.warns(DeprecationWarning, match="pack_slots"):
+        snaps, _times = rep.checkpoint_slots(
+            [s for s, _ in rep.engine.slot_costs()])
+    with pytest.warns(DeprecationWarning, match="unpack"):
+        rep.restore(snaps)
+    with pytest.warns(DeprecationWarning, match="drain_units"):
+        rep.drain()
+
+
+# --------------------------------------------------------- endpoints
+def test_accelerator_replica_stages_device_resident(models):
+    """An accelerator InstanceType drains through the DeviceStore
+    endpoint (HBM-to-HBM analogue) and the stream stays exact."""
+    cfg, params = models["granite-8b"]
+    prompt = _prompt(cfg, 8, seed=6)
+    ref = _reference_tokens(cfg, params, prompt, max_new=10)
+
+    src = Replica(0, cfg, params,
+                  InstanceType("gpu.1x", 1.0, accelerator=True),
+                  batch_size=2, max_seq=64)
+    assert isinstance(src.endpoint, DeviceEndpoint)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=10)
+    src.submit(req)
+    for _ in range(2):
+        src.step_once(now=0.0)
+    units, queued, (ckpt_s, restore_s) = src.drain_units()
+    assert len(units) == 1 and not queued
+    assert units[0].residency == "device"
+    assert ckpt_s > 0.0 and restore_s > 0.0     # stages really ran
+
+    dst = Replica(1, cfg, params, InstanceType("cpu.1x", 1.0),
+                  batch_size=2, max_seq=64)
+    assert isinstance(dst.endpoint, HostEndpoint)
+    dst.unpack(units)
+    while dst.has_work():
+        dst.step_once(now=0.0)
+    dst.engine.pop_completed()
+    assert req.done and req.out_tokens == ref
+
+
+# ----------------------------------------------------- cluster policy
+def _mini_cluster(cfg, params, *, preempt, n_rep=1):
+    fleet = [InstanceType("std.1x", 1.0, cost_per_hour=2.0)
+             for _ in range(n_rep)]
+    return ServingCluster(
+        cfg, params, fleet, batch_size=2, max_seq=48, dt=1.0,
+        decode_block=2,
+        preemption=SLOPreemption() if preempt else None,
+        autoscaler_kw=dict(scale_up_backlog=1e9, slo_scale_up=False))
+
+
+def test_slo_preemption_frees_batch_for_interactive(models):
+    """A batch-saturated replica pauses batch slots for an interactive
+    surge; everything completes, streams match the no-preemption run."""
+    cfg, params = models["granite-8b"]
+    interactive = SLOClass("interactive", 0, deadline=16.0)
+    batch = SLOClass("batch", 2, deadline=2000.0, admit_lazily=True)
+
+    def reqs():
+        rng = np.random.default_rng(11)
+        out = [(0.0, Request(rid=i,
+                             prompt=rng.integers(0, cfg.vocab_size, 6,
+                                                 dtype=np.int32),
+                             max_new_tokens=30, slo=batch))
+               for i in range(2)]
+        out += [(6.0, Request(rid=2 + i,
+                              prompt=rng.integers(0, cfg.vocab_size, 4,
+                                                  dtype=np.int32),
+                              max_new_tokens=5, slo=interactive))
+                for i in range(2)]
+        return out
+
+    outs = {}
+    for preempt in (False, True):
+        cl = _mini_cluster(cfg, params, preempt=preempt)
+        rs = reqs()
+        for at, r in rs:
+            cl.submit(r, at=at)
+        out = cl.run(max_time=5000)
+        outs[preempt] = (rs, out)
+        assert out["completed"] == 4 and out["dropped"] == 0
+
+    (rs0, off), (rs1, on) = outs[False], outs[True]
+    assert on["preemptions"] > 0
+    assert on["resumes"] == on["preemptions"]    # nothing stays parked
+    assert off["preemptions"] == 0
+    # preemption strictly improves interactive latency, tokens unchanged
+    assert (on["p99_latency_interactive"]
+            < off["p99_latency_interactive"])
+    for (_, a), (_, b) in zip(rs0, rs1):
+        assert a.out_tokens == b.out_tokens, a.rid
+
+
+def test_preemption_counts_in_traces(models):
+    """The preempted batch request's trace records the pause."""
+    cfg, params = models["granite-8b"]
+    interactive = SLOClass("interactive", 0, deadline=16.0)
+    batch = SLOClass("batch", 2, deadline=2000.0, admit_lazily=True)
+    cl = _mini_cluster(cfg, params, preempt=True)
+    rng = np.random.default_rng(12)
+    for i in range(2):
+        cl.submit(Request(rid=i,
+                          prompt=rng.integers(0, cfg.vocab_size, 6,
+                                              dtype=np.int32),
+                          max_new_tokens=30, slo=batch), at=0.0)
+    cl.submit(Request(rid=2,
+                      prompt=rng.integers(0, cfg.vocab_size, 4,
+                                          dtype=np.int32),
+                      max_new_tokens=5, slo=interactive), at=6.0)
+    out = cl.run(max_time=5000)
+    assert out["completed"] == 3
+    assert out["preemptions"] >= 1
+    assert sum(tr.preemptions for tr in cl.metrics.traces.values()) \
+        == out["preemptions"]
+    assert all(tr.slo == "batch" for tr in cl.metrics.traces.values()
+               if tr.preemptions)
+
+
+# ------------------------------------------------------------ scaling
+def test_cost_aware_scaling_shops_by_price_performance(models):
+    """The catalog's best speed-per-dollar type wins scale-ups AND spot
+    replacements; pool-incompatible entries are ignored."""
+    cfg, params = models["granite-8b"]
+    big = InstanceType("big.2x", 2.0, cost_per_hour=4.0)      # 0.5 /$
+    lean = InstanceType("lean.1x", 1.0, cost_per_hour=0.8)    # 1.25/$
+    other = InstanceType("other", 9.0, cost_per_hour=0.1,
+                         model_id="other-pool")
+    policy = CostAwareScaling([big, lean, other])
+    cl = ServingCluster(cfg, params, [big], batch_size=2, max_seq=48,
+                        scaling=policy)
+    rep = cl.replicas[0]
+    assert policy.select_itype(cl.view, "default", [rep]) is lean
+    assert policy.replacement(cl.view, rep) is lean
+    assert any("cost-aware pick lean.1x" in m for _, m in cl.timeline)
+    with pytest.raises(ValueError):
+        CostAwareScaling([])
+
+
+def test_default_itype_pool_validated_at_construction(models):
+    """A default_itype serving NO pool is rejected up front; a default
+    serving a DIFFERENT pool is substituted with a logged fallback."""
+    cfg, params = models["granite-8b"]
+    fleet = [InstanceType("std.1x", 1.0)]
+    with pytest.raises(ValueError, match="no fleet instance"):
+        ServingCluster(cfg, params, fleet, batch_size=2, max_seq=48,
+                       autoscaler_kw=dict(default_itype=InstanceType(
+                           "ghost", 1.0, model_id="missing-pool")))
+    # two pools, default belongs to pool "b": scaling pool "default"
+    # must fall back to the pool's own type and log the substitution
+    fleet2 = [InstanceType("std.1x", 1.0),
+              InstanceType("b.1x", 1.0, model_id="b")]
+    cl = ServingCluster(cfg, params, fleet2, batch_size=2, max_seq=48,
+                        models={"b": (cfg, params)},
+                        autoscaler_kw=dict(default_itype=fleet2[1]))
+    policy = cl.autoscaler.policy
+    picked = policy.select_itype(cl.view, "default", [cl.replicas[0]])
+    assert picked is cl.replicas[0].itype
+    assert any("using std.1x instead" in m for _, m in cl.timeline)
+
+
+# ------------------------------------------------------------- dollars
+def test_replica_dollar_metering():
+    """Per-pool dollar cost integrates launch->terminate (or horizon)."""
+    m = ClusterMetrics()
+    m.on_launch(0, "a", model_id="default", cost_per_hour=3600.0, t=0.0)
+    m.on_launch(1, "b", model_id="other", cost_per_hour=1800.0, t=100.0)
+    m.on_terminate(0, 50.0)
+    pools = m.pool_dollar_cost(horizon=200.0)
+    assert pools["default"] == pytest.approx(50.0)    # retired at 50
+    assert pools["other"] == pytest.approx(50.0)      # alive 100->200
+    assert m.fleet_dollar_cost(200.0) == pytest.approx(100.0)
+    # a replica launched after the horizon bills nothing (clamped)
+    m.on_launch(2, "c", model_id="late", cost_per_hour=3600.0, t=500.0)
+    assert m.pool_dollar_cost(200.0)["late"] == 0.0
