@@ -1,6 +1,6 @@
 """Perf-trajectory guard: fail CI when a persisted BENCH_*.json regresses.
 
-Two guarded figures, dispatched on the dump's ``scenario`` field:
+Guarded figures, dispatched on the dump's ``scenario`` field:
 
 * ``engine_throughput`` — the chunked-bulk-prefill speedup over the
   streamed baseline (row ``engine_prefill_speedup``) must stay at or
@@ -8,10 +8,16 @@ Two guarded figures, dispatched on the dump's ``scenario`` field:
 * ``cluster_slo`` — SLO-aware scheduling's interactive-class deadline
   attainment (row ``cluster_slo_slo_aware_interactive_p99``, derived
   field ``attainment=<X>``) must stay at or above ``--min-attainment``.
+* ``cluster_spot_market`` — interruption-adjusted market shopping must
+  keep strictly higher savings than the naive-cheapest shopper at
+  equal-or-better interactive attainment (summary row fields
+  ``savings=<adj>%vs<nai>%`` and ``attainment=<adj>vs<nai>``), and the
+  adjusted savings must stay at or above ``--min-savings``.
 
 Usage:
   python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
   python benchmarks/guard.py BENCH_cluster_slo.json --min-attainment 0.6
+  python benchmarks/guard.py BENCH_cluster_spot_market.json --min-savings 40
   python benchmarks/guard.py BENCH_*.json          # guard all known dumps
 """
 
@@ -47,6 +53,17 @@ def interactive_attainment(bench: dict) -> float:
                     r"attainment=([0-9.]+)")
 
 
+def market_savings(bench: dict) -> tuple:
+    """(adjusted, naive) savings % and attainment from a
+    cluster_spot_market dump's summary row."""
+    row = "cluster_spot_market_summary"
+    sav_a = _derived(bench, row, r"savings=([0-9.]+)%vs")
+    sav_n = _derived(bench, row, r"savings=[0-9.]+%vs([0-9.]+)%")
+    att_a = _derived(bench, row, r"attainment=([0-9.]+)vs")
+    att_n = _derived(bench, row, r"attainment=[0-9.]+vs([0-9.]+)")
+    return sav_a, sav_n, att_a, att_n
+
+
 def check(bench: dict, args) -> bool:
     scenario = bench.get("scenario", "")
     if scenario == "engine_throughput":
@@ -69,6 +86,26 @@ def check(bench: dict, args) -> bool:
         print(f"guard: OK — SLO-aware interactive attainment {att:.3f} "
               f">= {args.min_attainment:.2f}")
         return True
+    if scenario == "cluster_spot_market":
+        sav_a, sav_n, att_a, att_n = market_savings(bench)
+        if sav_a <= sav_n:
+            print(f"guard: FAIL — adjusted market shopping no longer "
+                  f"beats naive on savings ({sav_a:.1f}% vs {sav_n:.1f}%)",
+                  file=sys.stderr)
+            return False
+        if att_a < att_n:
+            print(f"guard: FAIL — adjusted shopping lost interactive "
+                  f"attainment ({att_a:.3f} vs naive {att_n:.3f})",
+                  file=sys.stderr)
+            return False
+        if sav_a < args.min_savings:
+            print(f"guard: FAIL — adjusted savings {sav_a:.1f}% regressed "
+                  f"below {args.min_savings:.1f}%", file=sys.stderr)
+            return False
+        print(f"guard: OK — adjusted savings {sav_a:.1f}% > naive "
+              f"{sav_n:.1f}% at attainment {att_a:.3f} >= {att_n:.3f} "
+              f"(floor {args.min_savings:.1f}%)")
+        return True
     print(f"guard: skip — no guard registered for scenario {scenario!r}")
     return True
 
@@ -83,6 +120,9 @@ def main() -> None:
     ap.add_argument("--min-attainment", type=float, default=0.6,
                     help="minimum SLO-aware interactive deadline "
                          "attainment (cluster_slo dumps)")
+    ap.add_argument("--min-savings", type=float, default=30.0,
+                    help="minimum interruption-adjusted savings percent "
+                         "vs all-on-demand (cluster_spot_market dumps)")
     args = ap.parse_args()
     ok = True
     for path in args.bench_json:

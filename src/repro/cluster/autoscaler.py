@@ -67,25 +67,53 @@ class Autoscaler:
         if ev.kind == "rebalance_recommendation":
             if rep.serving:
                 rep.state = ReplicaState.AT_RISK
-                # Mode C: request the replacement NOW, rescale later —
-                # the scaling policy chooses the instance type (cost-
-                # aware policies may shop the catalog instead of
-                # replacing like-for-like)
-                itype = self.policy.replacement(self.cluster.view, rep)
-                new = self.cluster.launch(
-                    itype, ready_at=now + self.replacement_latency,
-                    at=now)
-                self.cluster.log(now, f"rebalance_recommendation r{rep.rid} "
-                                      f"prewarm r{new.rid} ({itype.name})")
+                fb = self.cluster.fallback
+                if fb is not None:
+                    # market mode: the fallback strategy decides where
+                    # replacement capacity comes from — which hardware,
+                    # which market, or none at all (queue_work /
+                    # scale_down ride out the loss on survivors)
+                    order = fb.replacement(self.cluster.view, rep,
+                                           self.cluster.exchange, now)
+                    if order is None:
+                        self.cluster.log(
+                            now, f"rebalance_recommendation r{rep.rid} "
+                                 f"fallback={fb.name}: no replacement")
+                    else:
+                        new = self.cluster.launch(
+                            order.itype,
+                            ready_at=now + self.replacement_latency,
+                            at=now, market=order.market, strategy=fb.name)
+                        self.cluster.log(
+                            now, f"rebalance_recommendation r{rep.rid} "
+                                 f"fallback={fb.name} prewarm r{new.rid} "
+                                 f"({order.itype.name} @ {order.market})")
+                else:
+                    # Mode C: request the replacement NOW, rescale later
+                    # — the scaling policy chooses the instance type
+                    # (cost-aware policies may shop the catalog instead
+                    # of replacing like-for-like)
+                    itype = self.policy.replacement(self.cluster.view, rep)
+                    new = self.cluster.launch(
+                        itype, ready_at=now + self.replacement_latency,
+                        at=now)
+                    self.cluster.log(now,
+                                     f"rebalance_recommendation r{rep.rid} "
+                                     f"prewarm r{new.rid} ({itype.name})")
         elif ev.kind == "interruption_notice":
             self.cluster.log(now, f"interruption_notice r{rep.rid}")
-            self.drain(rep, now)
+            self.drain(rep, now, reason="interruption")
         elif ev.kind == "terminate":
             self.cluster.retire(rep, now)
             self.cluster.log(now, f"terminated r{rep.rid}")
 
-    def drain(self, rep: Replica, now: float):
-        """Pack the doomed replica's slots; re-admit them elsewhere."""
+    def drain(self, rep: Replica, now: float,
+              reason: str = "interruption"):
+        """Pack the doomed replica's slots; re-admit them elsewhere.
+
+        ``reason`` stamps unit provenance and the savings ledger:
+        "interruption" = spot notice, "scale_down" = policy retirement.
+        """
         self.cluster.loop.cancel(rep.step_event)   # no step after the drain
         rep.step_event = None
         units, queued, (ckpt_s, restore_s) = rep.drain_units()
@@ -97,8 +125,12 @@ class Autoscaler:
             t=now, replica=rep.rid, slots_migrated=len(units),
             queued_requeued=len(queued), checkpoint_s=ckpt_s,
             restore_s=restore_s, endpoint=rep.endpoint.kind))
+        if reason == "interruption" and metrics.ledger is not None:
+            metrics.ledger.on_interruption(rep.rid, now,
+                                           overhead_s=ckpt_s + restore_s)
         for u in units:
             u.packed_t = now
+            u.record_hop(rep.rid, now, reason)
             metrics.on_migration(u.rid)
         if queued:
             self.cluster.router.requeue(queued)
@@ -119,13 +151,13 @@ class Autoscaler:
             if decision.launch is not None:
                 new = cl.launch(decision.launch,
                                 ready_at=now + self.replacement_latency,
-                                at=now)
+                                at=now, strategy="scale_up")
                 cl.log(now, f"scale_up r{new.rid} ({decision.launch.name}) "
                             f"pool={model_id} {decision.reason}")
             if decision.retire is not None:
                 victim = cl.replica_by_rid(decision.retire)
                 if victim is not None and victim.serving:
-                    self.drain(victim, now)
+                    self.drain(victim, now, reason="scale_down")
                     cl.retire(victim, now)
                     cl.log(now, f"scale_down r{victim.rid} "
                                 f"pool={model_id} ({decision.reason})")

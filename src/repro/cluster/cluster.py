@@ -88,7 +88,8 @@ class ServingCluster:
                  rebalance_interval: Optional[float] = None,
                  rebalance_ratio: float = 1.75,
                  preemption: Optional[PreemptionPolicy] = None,
-                 scaling: Optional[ScalingPolicy] = None):
+                 scaling: Optional[ScalingPolicy] = None,
+                 market=None, fallback=None):
         if admission not in ("fifo", "priority"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -116,6 +117,24 @@ class ServingCluster:
         self.faults = trace if trace is not None else FaultTrace(
             rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
         self.metrics = ClusterMetrics()
+        # spot-market mode: every launch becomes a priced purchase on
+        # the exchange; the sampled interruption time (a function of the
+        # market bought) drives the SAME FaultTrace transport as
+        # explicit injections, and the exchange's ledger reports savings
+        # through metrics.summary().  A fallback strategy (default:
+        # buy on-demand) decides where replacement capacity comes from
+        # when a spot notice fires.
+        self.exchange = market
+        if fallback is not None and market is None:
+            raise ValueError("a fallback strategy needs a market "
+                             "exchange (pass market=SpotExchange(...))")
+        if market is not None:
+            from repro.market.fallback import OnDemandFallback, make_fallback
+            self.fallback = make_fallback(fallback) or OnDemandFallback()
+            market.bind_metrics(self.metrics)
+            self.metrics.attach_ledger(market.ledger)
+        else:
+            self.fallback = None
         self.timeline: List[Tuple[float, str]] = []
         self._rid = itertools.count()
         self.loop.register("arrival", self._on_arrival)
@@ -141,7 +160,8 @@ class ServingCluster:
             placement=self.router,
             preemption=(preemption if preemption is not None else
                         PreemptionPolicy(batch_admit_headroom)),
-            scaling=self.autoscaler.policy)
+            scaling=self.autoscaler.policy,
+            fallback=self.fallback)
         self._control_ev = None
         self._dispatch_ev = None
         self._rebalance_ev = None
@@ -155,9 +175,18 @@ class ServingCluster:
         return self.models.get(model_id, (self.cfg, self.params))
 
     def launch(self, itype: InstanceType, *, ready_at: float,
-               at: Optional[float] = None) -> Replica:
+               at: Optional[float] = None, market: str = "auto",
+               strategy: str = "initial") -> Replica:
         """Bring up a replica; billing starts at ``at`` (the request
-        time — a pre-warmed instance costs money while it warms)."""
+        time — a pre-warmed instance costs money while it warms).
+
+        With a market exchange attached the launch is a *purchase*:
+        ``market`` picks the pool ("auto" shops the catalog by the
+        exchange's pricing mode, "on_demand" buys the no-risk option, a
+        name buys that market) and the sampled interruption time is
+        injected into the cluster's ``FaultTrace`` — so who gets
+        interrupted, and when, follows from what was bought where.
+        """
         rid = next(self._rid)
         if rid >= self.monitor.n_pes:
             self.monitor.resize(rid + 1)
@@ -170,9 +199,17 @@ class ServingCluster:
                       monitor=self.monitor, store=self.store,
                       ready_at=ready_at, seed=self.seed)
         self.replicas.append(rep)
+        t_buy = at if at is not None else ready_at
         self.metrics.on_launch(rid, itype.name, model_id=itype.model_id,
-                               cost_per_hour=itype.cost_per_hour,
-                               t=at if at is not None else ready_at)
+                               cost_per_hour=itype.cost_per_hour, t=t_buy)
+        if self.exchange is not None:
+            rep.purchase, t_int = self.exchange.purchase(
+                rid, itype, t=t_buy, market=market, strategy=strategy)
+            if t_int is not None:
+                self.faults.inject(t_int, rid)
+            self.log(t_buy,
+                     f"buy r{rid} {itype.name} @ {rep.purchase.market} "
+                     f"(${rep.purchase.rate_at_buy:.2f}/h, {strategy})")
         if rep.state == ReplicaState.LAUNCHING:
             self.loop.schedule(ready_at, "replica_ready", rid=rid)
         return rep
@@ -203,6 +240,12 @@ class ServingCluster:
         if not units:
             return True
         rates = self.rates()
+        # queue_work fallback: drained units only land on replicas with
+        # free slots — they wait parked rather than pile onto engines
+        # that are already saturated
+        need_free = (self.fallback is not None
+                     and self.fallback.queue_until_free)
+        free = {r.rid: r.engine.free_slots for r in self.replicas}
 
         def key(r):
             return r.engine.backlog_tokens() / max(rates.get(r.rid, 1.0),
@@ -213,12 +256,17 @@ class ServingCluster:
             # engine built from the same (cfg, max_seq)
             survivors = [r for r in self.replicas if r.admitting
                          and r.model_id == u.request.model_id]
+            if need_free:
+                survivors = [r for r in survivors if free.get(r.rid, 0) > 0]
             if not survivors:
                 self._parked.append(u)
                 all_placed = False
                 continue
             tgt = min(survivors, key=key)
+            if need_free:
+                free[tgt.rid] -= 1
             tgt.unpack([u])
+            u.record_hop(tgt.rid, now, "land")
             self._kick(tgt, now)
             self.log(now, f"readmit req{u.rid} -> r{tgt.rid}")
         return all_placed
@@ -433,6 +481,7 @@ class ServingCluster:
                 self.metrics.preempt_stage_s += ckpt_s + restore_s
             for u in units:
                 u.packed_t = now
+                u.record_hop(rep.rid, now, "preempt")
                 self.metrics.on_preempt(u.rid)
                 self.log(now, f"preempt req{u.rid} ({u.slo_name}) "
                               f"r{rep.rid} slot freed")
@@ -449,6 +498,7 @@ class ServingCluster:
                 continue
             for u in units:
                 self._paused.remove(u)
+                u.record_hop(rep.rid, now, "resume")
                 self.metrics.on_resume(u.rid)
                 self.log(now, f"resume req{u.rid} -> r{rep.rid}")
             rep.resume(units)
@@ -472,9 +522,12 @@ class ServingCluster:
                 continue
             for u in units:
                 u.packed_t = now
+                u.record_hop(src.rid, now, "rebalance")
                 self.metrics.on_migration(u.rid)
             self.metrics.rebalance_migrations += len(units)
             dst.unpack(units)
+            for u in units:
+                u.record_hop(dst.rid, now, "land")
             self.log(now, f"rebalance req{units[0].rid} "
                           f"r{src.rid} -> r{dst.rid}")
             self._kick(dst, now)

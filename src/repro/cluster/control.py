@@ -574,7 +574,13 @@ SCALING_POLICIES = {"backlog": BacklogScaling, "cost_aware": CostAwareScaling}
 # -------------------------------------------------------- control plane
 @dataclasses.dataclass
 class ControlPlane:
-    """The cluster's three policy seams, swappable independently."""
+    """The cluster's policy seams, swappable independently.
+
+    ``fallback`` is the market-mode fourth seam (a
+    ``repro.market.FallbackStrategy``): where replacement capacity
+    comes from when a spot notice fires.  None outside market runs.
+    """
     placement: PlacementPolicy
     preemption: PreemptionPolicy
     scaling: ScalingPolicy
+    fallback: Optional[object] = None

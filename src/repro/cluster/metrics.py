@@ -79,6 +79,13 @@ class ClusterMetrics:
         self.preemptions = 0             # slots paused by the preemptor
         self.resumes = 0                 # paused units re-admitted
         self.preempt_stage_s = 0.0       # real store seconds spent pausing
+        self.ledger = None               # SavingsLedger (market mode only)
+
+    def attach_ledger(self, ledger):
+        """Market mode: the exchange's ``SavingsLedger`` reports savings
+        vs all-on-demand (with by-market / by-strategy breakdowns)
+        through ``summary()``, and terminations stamp purchase ends."""
+        self.ledger = ledger
 
     # ------------------------------------------------------------ request
     def on_submit(self, rid: int, now: float, *, slo: str = "standard",
@@ -120,6 +127,8 @@ class ClusterMetrics:
         st = self.replicas.get(rid)
         if st is not None and st.terminated_t is None:
             st.terminated_t = now
+        if self.ledger is not None:
+            self.ledger.on_terminate(rid, now)
 
     def on_tokens(self, rid: int, tokens: int, busy_s: float):
         st = self.replicas[rid]
@@ -234,6 +243,11 @@ class ClusterMetrics:
                 t.slo == slo and not t.met_deadline
                 and np.isfinite(t.deadline_t)
                 for t in self.traces.values()))
+        # market mode: savings vs all-on-demand + by-market/by-strategy
+        # breakdowns, billed through the same completion horizon as
+        # fleet_dollar_cost (which keeps its static-rate semantics)
+        if self.ledger is not None:
+            out.update(self.ledger.report(now))
         return out
 
     def per_replica(self) -> List[Dict[str, float]]:

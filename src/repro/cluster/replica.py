@@ -104,6 +104,9 @@ class Replica:
         self.state = ReplicaState.LAUNCHING if ready_at > 0 \
             else ReplicaState.RUNNING
         self.tokens_total = 0
+        # market mode: the PurchaseRecord this replica was bought under
+        # (which market, which strategy) — None outside market runs
+        self.purchase = None
         self.completed: List[Request] = []
         self.step_event = None       # pending replica_step on the loop
         self.last_step_cost = 1.0 / itype.speed

@@ -15,10 +15,11 @@ elastic-job-scheduler deadline layer (Bhosale & Kale) on top:
   queue migrations (§III-B).  Admission order is FIFO.
 * ``DeadlineAwareRouter`` — extends GreedyRefine to minimize predicted
   deadline misses: pending requests are ordered by (priority, deadline),
-  the GreedyRefine assignment is simulated per replica (EDF service
-  order, measured rate, prefill-discounted backlog as base load) and a
-  repair pass relocates predicted-missing requests to whichever replica
-  reduces total predicted misses.
+  the GreedyRefine assignment is simulated per replica at slot
+  granularity (EDF admission as slots free; free and freshly preempted
+  slots count as available now) and a repair pass relocates
+  predicted-missing requests to whichever replica reduces total
+  predicted misses.
 
 Every router is **model-aware**: replicas declare a ``model_id`` (their
 ``InstanceType``'s pool) and a request is only ever placed on a replica
@@ -28,6 +29,7 @@ replica stay queued until one appears.
 
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -220,9 +222,11 @@ class DeadlineAwareRouter(RateAwareRouter):
     On top of the rate-aware placement: pending requests are admitted in
     (priority, deadline) order — interactive work queue-jumps batch work
     — and the GreedyRefine assignment is repaired by relocating requests
-    predicted to miss their deadline (EDF service simulation per replica
-    over measured rate and prefill-discounted backlog) onto the replica
-    that minimizes total predicted misses.
+    predicted to miss their deadline (slot-level EDF simulation per
+    replica at the measured rate: free — including freshly preempted or
+    drained — slots admit immediately, active slots free at their
+    predicted completion) onto the replica that minimizes total
+    predicted misses.
     """
 
     name = "slo_aware"
@@ -236,18 +240,48 @@ class DeadlineAwareRouter(RateAwareRouter):
     def _order_pending(self, pending: List[Request]) -> List[Request]:
         return sorted(pending, key=_slo_key)
 
-    def _predicted_misses(self, assignment: np.ndarray,
-                          pending: List[Request], loads: np.ndarray,
-                          rate: np.ndarray, base: np.ndarray,
+    def _slot_free_times(self, targets: List[Replica],
+                         rate: np.ndarray) -> List[List[float]]:
+        """Per-replica slot-availability offsets for the EDF simulation.
+
+        Every currently-free slot is available *immediately* — including
+        slots just freed by a preemption or a drain — and every active
+        slot frees at its predicted completion.  Restore-queue units
+        (admitted ahead of fresh work) claim the earliest slots first.
+        The old serial model charged the whole base backlog before any
+        queued request could start, so a replica with one long slot and
+        three freed ones looked as busy as a fully loaded engine.
+        """
+        out = []
+        for pe, rep in enumerate(targets):
+            free = [0.0] * rep.engine.free_slots
+            free += [c / rate[pe] for _, c in rep.engine.slot_costs()]
+            heapq.heapify(free)
+            for c in rep.engine.restore_costs(self.prefill_discount):
+                start = heapq.heappop(free) if free else 0.0
+                heapq.heappush(free, start + c / rate[pe])
+            out.append(free or [0.0])
+        return out
+
+    def _predicted_misses(self, assignment: np.ndarray, loads: np.ndarray,
+                          rate: np.ndarray,
+                          slot_free: List[List[float]],
                           deadlines: np.ndarray,
                           now: float) -> Tuple[int, List[int]]:
-        """Simulate EDF service per replica; count predicted misses."""
+        """Simulate slot-level EDF service per replica; count predicted
+        misses.  ``pending`` is already in (priority, deadline) order,
+        so each replica admits its assigned requests in EDF order as
+        slots free up — queued work runs in parallel across slots, not
+        serially behind the entire base load."""
         misses, missed = 0, []
         for pe in range(len(rate)):
-            t = now + base[pe] / rate[pe]
+            free = list(slot_free[pe])
+            heapq.heapify(free)
             for i in np.flatnonzero(assignment == pe):
-                t += loads[i] / rate[pe]
-                if t > deadlines[i]:
+                start = heapq.heappop(free)
+                done = start + loads[i] / rate[pe]
+                heapq.heappush(free, done)
+                if now + done > deadlines[i]:
                     misses += 1
                     missed.append(int(i))
         return misses, missed
@@ -259,8 +293,9 @@ class DeadlineAwareRouter(RateAwareRouter):
         deadlines = np.asarray([q.deadline_t() for q in pending])
         if not np.isfinite(deadlines).any() or len(targets) < 2:
             return assignment
+        slot_free = self._slot_free_times(targets, rate)
         best, missed = self._predicted_misses(
-            assignment, pending, loads, rate, base, deadlines, now)
+            assignment, loads, rate, slot_free, deadlines, now)
         repairs = 0
         while missed and best > 0 and repairs < self.max_repairs:
             improved = False
@@ -273,7 +308,7 @@ class DeadlineAwareRouter(RateAwareRouter):
                     trial = assignment.copy()
                     trial[i] = pe
                     m, mi = self._predicted_misses(
-                        trial, pending, loads, rate, base, deadlines, now)
+                        trial, loads, rate, slot_free, deadlines, now)
                     if m < best:
                         assignment, best, missed = trial, m, mi
                         improved = True

@@ -72,17 +72,47 @@ def run_single(args, cfg, params):
           f"({stats['tok_per_s']:.1f} tok/s)")
 
 
+def _make_exchange(args, fleet):
+    """Default two-market exchange over the fleet's instance types: a
+    cheap-but-volatile market (scheduled price spike, spike-coupled
+    interruption intensity) and a pricier steady one, both priced
+    relative to the fleet's mean on-demand rate."""
+    from repro.market import MarketCatalog, SpotExchange, SpotMarket
+    itypes = sorted({it for it in fleet}, key=lambda it: it.name)
+    od = sum(it.cost_per_hour for it in itypes) / len(itypes)
+    cat = MarketCatalog()
+    cat.add_market(SpotMarket(
+        "volatile", base_rate=0.25 * od, volatility=0.08,
+        spikes=((120.0, 360.0, 5.0),), interruptions_per_hour=2.0,
+        price_power=3.0, seed=args.seed + 1))
+    cat.add_market(SpotMarket(
+        "steady", base_rate=0.45 * od, volatility=0.02,
+        interruptions_per_hour=0.1, seed=args.seed + 2))
+    for it in itypes:
+        cat.list_instance(it, markets=("volatile", "steady"))
+    return SpotExchange(cat, seed=args.seed, mode=args.market)
+
+
 def run_cluster(args, cfg, params):
     from repro.cluster import (PREEMPTION_POLICIES, ROUTERS,
                                SCALING_POLICIES, ServingCluster)
     fleet = _parse_fleet(args.fleet)
     preemption = PREEMPTION_POLICIES[args.preemption]() \
         if args.preemption != "none" else None
+    exchange = None
+    if args.market != "off":
+        exchange = _make_exchange(args, fleet)
     scaling = None
     if args.scaling == "cost_aware":
-        # the catalog is the set of distinct instance types in the fleet
-        catalog = sorted({it for it in fleet}, key=lambda it: it.name)
-        scaling = SCALING_POLICIES["cost_aware"](catalog)
+        if exchange is not None:
+            # market mode: shop (instance type, market) pairs by speed
+            # per interruption-adjusted effective dollar
+            from repro.market import MarketAwareScaling
+            scaling = MarketAwareScaling(exchange)
+        else:
+            # the catalog is the distinct instance types in the fleet
+            catalog = sorted({it for it in fleet}, key=lambda it: it.name)
+            scaling = SCALING_POLICIES["cost_aware"](catalog)
     cl = ServingCluster(cfg, params, fleet,
                         router=ROUTERS[args.router](),
                         batch_size=args.batch_size, max_seq=args.max_seq,
@@ -94,7 +124,9 @@ def run_cluster(args, cfg, params):
                         notice_deadline=args.notice_deadline,
                         admission=args.admission,
                         rebalance_interval=args.migrate_every,
-                        preemption=preemption, scaling=scaling)
+                        preemption=preemption, scaling=scaling,
+                        market=exchange,
+                        fallback=args.fallback if exchange else None)
     from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
     cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
@@ -119,6 +151,20 @@ def run_cluster(args, cfg, params):
         print(f"  preemptions={out['preemptions']} "
               f"resumes={out['resumes']}")
     print(f"  fleet_dollar_cost=${out['fleet_dollar_cost']:.4f}")
+    if exchange is not None:
+        print(f"  market[{args.market}]: "
+              f"cost=${out['market_dollar_cost']:.4f} "
+              f"vs on-demand ${out['on_demand_dollar_cost']:.4f} "
+              f"-> savings {out['savings_pct']:.1f}% "
+              f"({out['spot_interruptions']} interruptions, "
+              f"fallback={args.fallback})")
+        for m in exchange.catalog.markets():
+            n = out.get(f"market_{m.name}_purchases", 0)
+            if n:
+                print(f"    {m.name}: {n} buys "
+                      f"${out[f'market_{m.name}_dollars']:.4f} "
+                      f"{out[f'market_{m.name}_interruptions']} "
+                      f"interruptions")
     for k in sorted(out):
         if k.startswith("attainment_"):
             slo = k[len("attainment_"):]
@@ -175,6 +221,17 @@ def main():
     ap.add_argument("--migrate-every", type=float, default=None,
                     help="mid-stream migration pass interval in virtual "
                          "seconds (default: off)")
+    ap.add_argument("--market", default="off",
+                    choices=("off", "naive", "adjusted"),
+                    help="buy replicas on priced spot markets; naive "
+                         "shops the cheapest rate right now, adjusted "
+                         "the interruption-adjusted effective price")
+    ap.add_argument("--fallback", default="on_demand",
+                    choices=("on_demand", "different_market",
+                             "different_type", "queue_work",
+                             "scale_down"),
+                    help="replacement strategy on a spot rebalance "
+                         "recommendation (market mode only)")
     ap.add_argument("--interrupt-at", type=float, default=None,
                     help="inject a spot interruption on replica 0 at this "
                          "virtual time")

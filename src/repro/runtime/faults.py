@@ -1,8 +1,12 @@
 """One fault schedule for every subsystem (paper §IV, AWS FIS analogue).
 
 A :class:`FaultTrace` materializes an interruption schedule — injected
-explicitly, sampled from a seeded Poisson process, or read from a trace
-file — into the full §IV spot lifecycle per interruption:
+explicitly, sampled from a seeded Poisson process, read from a trace
+file, or driven per-purchase by the market layer (a ``SpotExchange``
+buy samples the instance's interruption time from its market's
+price-coupled intensity and injects it here, so interruptions are a
+function of *which market each replica was bought in*) — into the full
+§IV spot lifecycle per interruption:
 
     rebalance_recommendation  at  t
     interruption_notice       at  t + rebalance_lead
@@ -91,6 +95,14 @@ class FaultTrace:
                 t, target = line.split()
                 trace.inject(float(t), int(target))
         return trace
+
+    def to_file(self, path: str):
+        """Write the interruption schedule as ``<t> <target>`` lines;
+        ``from_file`` round-trips it exactly (``repr`` floats)."""
+        with open(path, "w") as fh:
+            fh.write("# fault trace: <t> <target> per line\n")
+            for t, target in self.interruptions:
+                fh.write(f"{t!r} {target}\n")
 
     def inject(self, t: float, target: int):
         """FIS analogue: schedule the full lifecycle for ``target``."""

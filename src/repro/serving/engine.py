@@ -183,7 +183,11 @@ class ServingEngine:
         self._prompt_buf = jnp.zeros((batch_size, max_seq), jnp.int32)
         self._slots: List[Optional[Request]] = [None] * batch_size
         self._queue: List[Request] = []
-        self._restore: List[SlotSnapshot] = []
+        self._restore: List["WorkUnit"] = []
+        # per-slot provenance of restored units: slot -> (uid, hops,
+        # origin).  ``pack`` re-uses it so a unit keeps ONE identity and
+        # one hop history across any number of pack->unpack round trips.
+        self._unit_meta: Dict[int, Tuple[int, list, Optional[int]]] = {}
         self._completed: List[Request] = []
         # exact host mirrors of the device progress counters: advanced by
         # projection after every decode window, overwritten with device
@@ -266,9 +270,16 @@ class ServingEngine:
         """
         d = self.prefill_discount
         load = sum(cost for _, cost in self.slot_costs())
-        load += sum(s.remaining_cost(d) for s in self._restore)
+        load += sum(u.snapshot.remaining_cost(d) for u in self._restore)
         load += sum(request_cost(r, d) for r in self._queue)
         return load
+
+    def restore_costs(self, discount: Optional[float] = None) -> List[float]:
+        """Remaining discounted load per not-yet-admitted restore-queue
+        unit (they claim free slots ahead of fresh work — the router's
+        slot-availability simulation must count them)."""
+        d = self.prefill_discount if discount is None else discount
+        return [u.snapshot.remaining_cost(d) for u in self._restore]
 
     def slot_costs(self) -> List[Tuple[int, float]]:
         """Per occupied slot: (slot, remaining discounted load).
@@ -383,7 +394,13 @@ class ServingEngine:
             if self._slots[slot] is not None:
                 continue
             if self._restore:
-                self._install(self._restore.pop(0), slot)
+                u = self._restore.pop(0)
+                self._install(u.snapshot, slot)
+                # keep the unit's identity alive on the slot: a later
+                # pack() re-emits the SAME uid and extends the same hop
+                # history (the list object is shared, so provenance
+                # recorded while the slot runs lands on the right unit)
+                self._unit_meta[slot] = (u.uid, u.hops, u.origin)
             elif self._queue:
                 self._admit_fresh(self._queue.pop(0), slot)
 
@@ -491,6 +508,7 @@ class ServingEngine:
                 req.done = True
                 self._completed.append(req)
                 self._slots[slot] = None
+                self._unit_meta.pop(slot, None)
 
     # ----------------------------------------------- WorkUnit pack/unpack
     #
@@ -500,14 +518,15 @@ class ServingEngine:
     # snapshot_slots/restore_slots/drain names are deprecated shims.
 
     def _snapshot_slots(self, slots: Optional[List[int]] = None
-                        ) -> List[SlotSnapshot]:
+                        ) -> List[Tuple[int, SlotSnapshot]]:
         """Checkpoint and release occupied slots (the PUP 'pack' step).
 
         ``slots`` restricts the checkpoint to a subset (the rebalancer's
         mid-stream migration and the preemptor pick single victims);
         None takes every occupied slot.  Works at any point in a
         request's life — including right after a bulk prefill chunk,
-        before the prompt is fully fed.
+        before the prompt is fully fed.  Returns ``(slot, snapshot)``
+        pairs so ``pack`` can look up per-slot unit provenance.
         """
         self._poll()
         occupied = [i for i, r in enumerate(self._slots)
@@ -519,14 +538,14 @@ class ServingEngine:
         snaps = []
         deactivate = self.sample.active
         for slot in occupied:
-            snaps.append(SlotSnapshot(
+            snaps.append((slot, SlotSnapshot(
                 request=self._slots[slot],
                 fed=int(self._fed[slot]),
                 next_tok=int(self._next_tok_host[slot]),
                 cache_len=int(self._fed[slot]),
                 cache={k: v.take(slot, axis=self._cache_axes[k])
                        for k, v in cache_host.items()},
-            ))
+            )))
             self._slots[slot] = None
             deactivate = deactivate.at[slot].set(0)
         self.sample = self.sample._replace(active=deactivate)
@@ -537,10 +556,22 @@ class ServingEngine:
 
         A packed unit is self-contained: ``unpack`` admits it into any
         engine built from the same ``(cfg, max_seq)`` and the greedy
-        stream continues bit-identically.
+        stream continues bit-identically.  A slot that was itself
+        restored from a unit re-emits that unit's ``uid``, hop history
+        and origin — identity is per in-flight request, not per
+        checkpoint, so multi-hop migration chains stay traceable.
         """
         from repro.serving.workunit import WorkUnit
-        return [WorkUnit(snapshot=s) for s in self._snapshot_slots(slots)]
+        units = []
+        for slot, snap in self._snapshot_slots(slots):
+            meta = self._unit_meta.pop(slot, None)
+            if meta is None:
+                units.append(WorkUnit(snapshot=snap))
+            else:
+                uid, hops, origin = meta
+                units.append(WorkUnit(snapshot=snap, uid=uid, hops=hops,
+                                      origin=origin))
+        return units
 
     def unpack(self, units: List["WorkUnit"]):
         """Queue packed units for admission (cache written on admit).
@@ -549,9 +580,13 @@ class ServingEngine:
         queued requests, so migrated/resumed work never starves behind
         new arrivals.
         """
-        for u in units:
-            u.hops += 1
-            self._restore.append(u.snapshot)
+        self._restore.extend(units)
+
+    def slot_provenance(self) -> Dict[int, Tuple[int, Tuple["Hop", ...]]]:
+        """Per restored slot: ``(unit uid, hop history so far)`` — the
+        observability window onto in-flight migration chains."""
+        return {slot: (uid, tuple(hops))
+                for slot, (uid, hops, _origin) in self._unit_meta.items()}
 
     def preempt(self, slots: Optional[List[int]] = None) -> List["WorkUnit"]:
         """Pause slots mid-stream: slot freed, snapshot retained.
@@ -580,11 +615,11 @@ class ServingEngine:
         """Empty the engine: packed in-flight work + the untouched queue.
 
         Not-yet-admitted units waiting in the restore queue ride along
-        (re-wrapped), so a drained engine hands back everything it owned.
+        as-is — same objects, same uids — so a drained engine hands back
+        everything it owned without laundering identities.
         """
-        from repro.serving.workunit import WorkUnit
         units = self.pack()
-        units.extend(WorkUnit(snapshot=s) for s in self._restore)
+        units.extend(self._restore)
         self._restore = []
         queued, self._queue = self._queue, []
         return units, queued
@@ -598,8 +633,9 @@ class ServingEngine:
 
     def restore_slots(self, snapshots: List[SlotSnapshot]):
         """Deprecated: use ``unpack(units)``."""
+        from repro.serving.workunit import WorkUnit
         _deprecated("restore_slots", "unpack")
-        self._restore.extend(snapshots)
+        self._restore.extend(WorkUnit(snapshot=s) for s in snapshots)
 
     def drain(self) -> Tuple[List[SlotSnapshot], List[Request]]:
         """Deprecated: use ``drain_units()`` (returns ``WorkUnit``s)."""

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 from repro.serving.engine import (DEFAULT_PREFILL_DISCOUNT, Request,
                                   SlotSnapshot)
@@ -49,6 +49,15 @@ RESIDENCY_DEVICE = "device"  # device-resident store (daemon analogue, §IV-A)
 _UIDS = itertools.count()
 
 
+@dataclasses.dataclass(frozen=True)
+class Hop:
+    """One provenance entry: what happened to a unit, where, and when."""
+    rid: int        # replica involved
+    t: float        # virtual time of the event
+    reason: str     # interruption | scale_down | rebalance | preempt |
+                    # land | resume
+
+
 @dataclasses.dataclass
 class WorkUnit:
     """A migratable chare: checkpointed request + identity + residency.
@@ -57,16 +66,28 @@ class WorkUnit:
     progress counters, this slot's cache columns as host arrays).  The
     rest is control-plane metadata: a stable identity across hops, the
     unit's lifecycle state, where its payload currently resides, and
-    provenance (who packed it, when, how many times it has moved).
+    provenance — ``uid`` survives re-packing on a destination engine
+    (the engine remembers which unit each restored slot came from), and
+    ``hops`` accumulates one :class:`Hop` per control-plane move, so a
+    spot-drain -> fallback -> rebalance chain is traceable end-to-end.
     """
 
     snapshot: SlotSnapshot
     uid: int = dataclasses.field(default_factory=lambda: next(_UIDS))
     state: str = PACKED             # PACKED | PAUSED
     residency: str = RESIDENCY_NONE
-    origin: Optional[int] = None    # replica rid that packed the unit
+    origin: Optional[int] = None    # replica rid that first packed the unit
     packed_t: Optional[float] = None  # virtual time of the checkpoint
-    hops: int = 0                   # completed pack->unpack round trips
+    hops: List[Hop] = dataclasses.field(default_factory=list)
+
+    # --------------------------------------------------------- provenance
+    def record_hop(self, rid: int, t: float, reason: str):
+        """Append one provenance entry (cluster layer: it knows time)."""
+        self.hops.append(Hop(rid, float(t), reason))
+
+    @property
+    def n_hops(self) -> int:
+        return len(self.hops)
 
     # ------------------------------------------------------------ payload
     @property

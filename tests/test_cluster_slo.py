@@ -153,28 +153,64 @@ def test_fifo_admission_never_holds(model):
 
 
 # ------------------------------------------------------- deadline routing
+def _stub_target(free_slots=0, slot_costs=(), restores=()):
+    """A replica stand-in exposing just what ``_slot_free_times`` reads."""
+    from types import SimpleNamespace
+    eng = SimpleNamespace(
+        free_slots=free_slots,
+        slot_costs=lambda: [(i, c) for i, c in enumerate(slot_costs)],
+        restore_costs=lambda discount=None: list(restores))
+    return SimpleNamespace(engine=eng)
+
+
 def test_deadline_router_repairs_predicted_misses(model):
-    """A request that GreedyRefine would leave behind a long batch queue
-    on the fast replica is relocated when that placement predicts a
-    deadline miss the other replica avoids."""
+    """A request that GreedyRefine would leave behind a long-running
+    slot on the fast replica is relocated when that placement predicts
+    a deadline miss the other replica's free slot avoids."""
     router = DeadlineAwareRouter()
     pending = [Request(rid=0, prompt=np.zeros(3, np.int32),
                        max_new_tokens=10, slo=TIGHT, arrival_t=0.0)]
     loads = np.asarray([10.0])
     rate = np.asarray([2.0, 1.0])
-    base = np.asarray([100.0, 0.0])     # fast replica deeply backlogged
+    base = np.asarray([200.0, 0.0])
     deadlines = np.asarray([12.0])
-    # pinned to the fast-but-backlogged replica: predicted miss
+    # fast replica: every slot busy for 100s; slow replica: a free slot
+    targets = [_stub_target(slot_costs=[200.0]), _stub_target(free_slots=1)]
+    slot_free = router._slot_free_times(targets, rate)
+    assert slot_free == [[100.0], [0.0]]
+    # pinned to the fast-but-fully-busy replica: predicted miss
     miss, missed = router._predicted_misses(
-        np.asarray([0]), pending, loads, rate, base, deadlines, now=0.0)
+        np.asarray([0]), loads, rate, slot_free, deadlines, now=0.0)
     assert miss == 1 and missed == [0]
     fixed = router._refine_assignment(
-        np.asarray([0]), [object(), object()], pending, loads, rate,
-        base, now=0.0)
+        np.asarray([0]), targets, pending, loads, rate, base, now=0.0)
     assert fixed[0] == 1                # moved to the idle slow replica
     miss, _ = router._predicted_misses(
-        fixed, pending, loads, rate, base, deadlines, now=0.0)
+        fixed, loads, rate, slot_free, deadlines, now=0.0)
     assert miss == 0
+
+
+def test_deadline_router_slot_level_parallelism():
+    """Two free slots serve two queued requests in parallel: the old
+    serial model predicted the second request missing (10s + 10s > 15s
+    deadline); the slot-level EDF simulation predicts zero misses — and
+    restore-queue units claim slots ahead of fresh work."""
+    router = DeadlineAwareRouter()
+    rate = np.asarray([1.0])
+    loads = np.asarray([10.0, 10.0])
+    deadlines = np.asarray([15.0, 15.0])
+    slot_free = router._slot_free_times([_stub_target(free_slots=2)], rate)
+    assert slot_free == [[0.0, 0.0]]
+    miss, _ = router._predicted_misses(
+        np.asarray([0, 0]), loads, rate, slot_free, deadlines, now=0.0)
+    assert miss == 0
+    # a restore-queue unit occupies the earliest slot first
+    (free,) = router._slot_free_times(
+        [_stub_target(free_slots=2, restores=[8.0])], rate)
+    assert sorted(free) == [0.0, 8.0]
+    miss, missed = router._predicted_misses(
+        np.asarray([0, 0]), loads, rate, [free], deadlines, now=0.0)
+    assert miss == 1 and missed == [1]   # 8 + 10 > 15: one slot is late
 
 
 def test_deadline_router_orders_by_priority_then_deadline():

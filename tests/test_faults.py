@@ -1,0 +1,93 @@
+"""FaultTrace contract tests (the §IV schedule the market layer drives).
+
+PR-6 coverage satellites: file round-trips, late injection into a bound
+loop (how per-purchase market interruptions arrive), equal-timestamp
+delivery order, and purchase-sequence determinism of the market-driven
+schedule.
+"""
+
+import numpy as np
+
+from repro.runtime import EventLoop, FaultTrace
+
+
+def test_trace_file_roundtrip(tmp_path):
+    """``to_file`` -> ``from_file`` reproduces the schedule exactly,
+    including floats with no short decimal form."""
+    trace = FaultTrace(rebalance_lead=6.0, notice_deadline=4.0)
+    trace.inject(1.0 / 3.0, 2)
+    trace.inject(92.94171263538088, 0)
+    trace.inject(100.0, 1)
+    p = tmp_path / "faults.txt"
+    trace.to_file(str(p))
+    back = FaultTrace.from_file(str(p), rebalance_lead=6.0,
+                                notice_deadline=4.0)
+    assert back.interruptions == trace.interruptions
+    assert [(n.t, n.kind, n.target) for n in back.events()] \
+        == [(n.t, n.kind, n.target) for n in trace.events()]
+
+
+def test_inject_after_bind_reaches_the_loop():
+    """A lifecycle injected AFTER ``bind`` still schedules its events on
+    the bound loop — the enabler for market-driven injection, where every
+    mid-run fallback purchase samples a fresh interruption."""
+    trace = FaultTrace(rebalance_lead=10.0, notice_deadline=5.0)
+    trace.inject(50.0, 0)                 # before bind
+    loop = EventLoop()
+    seen = []
+    loop.register("spot", lambda ev, t: seen.append(
+        (t, ev.payload["notice"].kind, ev.payload["notice"].target)))
+    trace.bind(loop)
+    trace.inject(20.0, 1)                 # after bind, BEHIND the first
+    loop.run()
+    assert seen == [
+        (20.0, "rebalance_recommendation", 1),
+        (30.0, "interruption_notice", 1),
+        (35.0, "terminate", 1),
+        (50.0, "rebalance_recommendation", 0),
+        (60.0, "interruption_notice", 0),
+        (65.0, "terminate", 0)]
+
+
+def test_equal_timestamp_events_poll_in_injection_order():
+    """Ties in time break by injection sequence, and a subscription
+    delivers each event exactly once even when a lifecycle lands behind
+    an already-polled watermark."""
+    trace = FaultTrace(rebalance_lead=0.0, notice_deadline=0.0)
+    trace.inject(10.0, 3)
+    trace.inject(10.0, 1)                 # same instant, later injection
+    sub = trace.subscribe()
+    assert [(n.target, n.kind) for n in sub.poll(10.0)] == [
+        (3, "rebalance_recommendation"), (3, "interruption_notice"),
+        (3, "terminate"),
+        (1, "rebalance_recommendation"), (1, "interruption_notice"),
+        (1, "terminate")]
+    trace.inject(5.0, 2)                  # behind the watermark
+    assert [n.target for n in sub.poll(10.0)] == [2, 2, 2]
+    assert sub.poll(10.0) == []
+
+
+def test_market_driven_schedule_is_purchase_deterministic():
+    """Same exchange seed + same purchase sequence -> bit-identical
+    interruption schedule in the trace (whole-cluster determinism)."""
+    from repro.cluster import InstanceType
+    from repro.market import MarketCatalog, SpotExchange, SpotMarket
+
+    def build():
+        cat = MarketCatalog()
+        cat.add_market(SpotMarket("m", base_rate=0.3,
+                                  interruptions_per_hour=30.0, seed=5))
+        it = InstanceType("std.1x", 1.0, cost_per_hour=1.0)
+        cat.list_instance(it, markets=("m",))
+        ex = SpotExchange(cat, seed=7, mode="naive")
+        trace = FaultTrace(rebalance_lead=6.0, notice_deadline=4.0)
+        for rid in range(6):
+            _, t_int = ex.purchase(rid, it, t=10.0 * rid, market="m")
+            if t_int is not None:
+                trace.inject(t_int, rid)
+        return trace
+
+    a, b = build(), build()
+    assert a.interruptions and a.interruptions == b.interruptions
+    assert np.all([x == y for x, y in zip(a.interruptions,
+                                          b.interruptions)])

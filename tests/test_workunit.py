@@ -121,7 +121,8 @@ def test_preempt_resume_mid_prefill_chunk_bit_identical(models, arch):
 
 def test_workunit_metadata(models):
     """Identity, SLO class, measured progress, and load accounting ride
-    the unit across a pack -> unpack hop."""
+    the unit across a pack -> unpack hop — and the uid plus the hop
+    journal survive a re-pack (end-to-end traceability)."""
     cfg, params = models["granite-8b"]
     eng = _engine(cfg, params)
     slo = SLOClass("batch", 2, deadline=100.0, admit_lazily=True)
@@ -135,12 +136,30 @@ def test_workunit_metadata(models):
     assert u.slo_name == "batch" and u.preemptible
     assert u.progress == u.snapshot.fed > 0
     assert u.remaining_cost() > 0
-    assert u.hops == 0
+    assert u.n_hops == 0
+    u.record_hop(0, 1.0, "interruption")
     other = _engine(cfg, params)
     other.unpack([u])
-    assert u.hops == 1
-    uids = [w.uid for w in (u, *other.pack())]
-    assert len(set(uids)) == len(uids)       # identities never collide
+    u.record_hop(1, 2.0, "land")
+    assert u.n_hops == 2
+    assert [(h.rid, h.reason) for h in u.hops] \
+        == [(0, "interruption"), (1, "land")]
+    # the admitted slot exposes the unit's identity and journal, and a
+    # re-pack hands back the SAME uid with the journal intact
+    other.step()
+    (prov,) = other.slot_provenance().values()
+    assert prov == (u.uid, tuple(u.hops))
+    (again,) = other.pack()
+    assert again.uid == u.uid and again.origin == u.origin
+    assert [h.reason for h in again.hops] == ["interruption", "land"]
+    # distinct units still never collide
+    req2 = Request(rid=8, prompt=_prompt(cfg, 6, seed=4),
+                   max_new_tokens=10, slo=slo)
+    eng2 = _engine(cfg, params)
+    eng2.submit(req2)
+    eng2.step()
+    (fresh,) = eng2.pack()
+    assert fresh.uid != again.uid
 
 
 @given(ops=st.lists(st.tuples(st.integers(0, 3),
