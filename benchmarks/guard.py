@@ -13,11 +13,17 @@ Guarded figures, dispatched on the dump's ``scenario`` field:
   equal-or-better interactive attainment (summary row fields
   ``savings=<adj>%vs<nai>%`` and ``attainment=<adj>vs<nai>``), and the
   adjusted savings must stay at or above ``--min-savings``.
+* ``engine_churn`` — the paged cache must beat the dense engine's decode
+  tokens/sec under churn at equal kv memory (summary field
+  ``churn_speedup``, floor ``--min-churn-speedup`` and always > 1x),
+  with bit-identical streams, a concurrent-slot high-water above the
+  dense lane count, and zero steady-state host syncs.
 
 Usage:
   python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
   python benchmarks/guard.py BENCH_cluster_slo.json --min-attainment 0.6
   python benchmarks/guard.py BENCH_cluster_spot_market.json --min-savings 40
+  python benchmarks/guard.py BENCH_engine_churn.json --min-churn-speedup 1.0
   python benchmarks/guard.py BENCH_*.json          # guard all known dumps
 """
 
@@ -64,6 +70,29 @@ def market_savings(bench: dict) -> tuple:
     return sav_a, sav_n, att_a, att_n
 
 
+def _derived_str(bench: dict, row_name: str, pattern: str) -> str:
+    for r in bench.get("rows", []):
+        if r.get("name") == row_name:
+            m = re.search(pattern, r.get("derived", ""))
+            if m:
+                return m.group(1)
+    raise SystemExit(
+        f"guard: no {row_name} row matching {pattern!r} in the dump "
+        f"(re-run benchmarks/run.py --scenario {bench.get('scenario')} "
+        f"--json first)")
+
+
+def churn_stats(bench: dict) -> tuple:
+    """(speedup, bit_identical, paged_peak_slots, dense_lanes,
+    steady_syncs) from an engine_churn dump's summary row."""
+    row = "engine_churn_summary"
+    return (_derived(bench, row, r"churn_speedup=([0-9.]+)x"),
+            _derived_str(bench, row, r"bit_identical=(\w+)") == "True",
+            int(_derived(bench, row, r"paged_peak_slots=([0-9]+)")),
+            int(_derived(bench, row, r"dense_lanes=([0-9]+)")),
+            int(_derived(bench, row, r"steady_syncs=([0-9]+)")))
+
+
 def check(bench: dict, args) -> bool:
     scenario = bench.get("scenario", "")
     if scenario == "engine_throughput":
@@ -106,6 +135,31 @@ def check(bench: dict, args) -> bool:
               f"{sav_n:.1f}% at attainment {att_a:.3f} >= {att_n:.3f} "
               f"(floor {args.min_savings:.1f}%)")
         return True
+    if scenario == "engine_churn":
+        speedup, identical, peak, lanes, syncs = churn_stats(bench)
+        floor = max(args.min_churn_speedup, 1.0)
+        if not identical:
+            print("guard: FAIL — paged cache no longer bit-identical to "
+                  "dense under churn", file=sys.stderr)
+            return False
+        if speedup <= 1.0 or speedup < floor:
+            print(f"guard: FAIL — paged churn speedup {speedup:.2f}x "
+                  f"regressed below {floor:.2f}x", file=sys.stderr)
+            return False
+        if peak <= lanes:
+            print(f"guard: FAIL — paged concurrent-slot high-water {peak} "
+                  f"no longer exceeds the dense lane count {lanes} at "
+                  f"equal cache memory", file=sys.stderr)
+            return False
+        if syncs != 0:
+            print(f"guard: FAIL — paged steady-state decode performed "
+                  f"{syncs} device->host syncs (must be 0)",
+                  file=sys.stderr)
+            return False
+        print(f"guard: OK — paged churn speedup {speedup:.2f}x >= "
+              f"{floor:.2f}x, bit-identical, peak slots {peak} > "
+              f"{lanes} dense lanes, 0 steady-state syncs")
+        return True
     print(f"guard: skip — no guard registered for scenario {scenario!r}")
     return True
 
@@ -123,6 +177,10 @@ def main() -> None:
     ap.add_argument("--min-savings", type=float, default=30.0,
                     help="minimum interruption-adjusted savings percent "
                          "vs all-on-demand (cluster_spot_market dumps)")
+    ap.add_argument("--min-churn-speedup", type=float, default=1.0,
+                    help="minimum paged-over-dense decode tokens/sec "
+                         "under churn (engine_churn dumps; always "
+                         "strictly > 1x)")
     args = ap.parse_args()
     ok = True
     for path in args.bench_json:

@@ -361,6 +361,7 @@ class ServingCluster:
             return                     # drained/terminated since scheduling
         emitted = rep.step_once(t)
         self.metrics.on_tokens(rep.rid, emitted, rep.last_step_cost)
+        self.metrics.on_occupancy(rep.rid, rep.engine.occupancy())
         done = self._harvest(rep, t)
         # the batch just run occupies [t, t + last_step_cost): the next
         # step event lands after its accounted cost

@@ -49,6 +49,11 @@ class ReplicaStats:
     cost_per_hour: float = 0.0   # dollars per virtual hour alive
     launched_t: float = 0.0      # billing start (launch request time)
     terminated_t: Optional[float] = None   # billing stop (None = alive)
+    # engine cache occupancy (high-water): concurrent occupied slots,
+    # and — paged-cache engines only — blocks in use vs pool size
+    peak_slots: int = 0
+    peak_blocks: int = 0
+    pool_blocks: int = 0
 
     def dollar_cost(self, horizon: float) -> float:
         """Dollars accrued by ``horizon`` (virtual seconds) — a live
@@ -134,6 +139,19 @@ class ClusterMetrics:
         st = self.replicas[rid]
         st.tokens += tokens
         st.busy_s += busy_s
+
+    def on_occupancy(self, rid: int, occ: Dict[str, int]):
+        """Fold an engine ``occupancy()`` sample into the replica's
+        high-water marks (slots always; blocks for paged caches)."""
+        st = self.replicas.get(rid)
+        if st is None:
+            return
+        st.peak_slots = max(st.peak_slots,
+                            int(occ.get("max_concurrent_slots", 0)))
+        st.peak_blocks = max(st.peak_blocks,
+                             int(occ.get("peak_blocks_in_use", 0)))
+        st.pool_blocks = max(st.pool_blocks,
+                             int(occ.get("pool_blocks", 0)))
 
     # --------------------------------------------------------------- cost
     def pool_dollar_cost(self, horizon: float) -> Dict[str, float]:
@@ -226,6 +244,15 @@ class ClusterMetrics:
             # fleet dollars through the completion horizon (per-pool
             # figures follow; single-pool fleets just get one entry)
             "fleet_dollar_cost": self.fleet_dollar_cost(now),
+            # cache-occupancy high-water across the fleet: most slots any
+            # replica ran concurrently, and (paged engines) the fullest
+            # any block pool got, as a fraction
+            "max_concurrent_slots": max(
+                (s.peak_slots for s in self.replicas.values()), default=0),
+            "peak_block_occupancy": max(
+                (s.peak_blocks / s.pool_blocks
+                 for s in self.replicas.values() if s.pool_blocks),
+                default=0.0),
         }
         for pool, cost in sorted(self.pool_dollar_cost(now).items()):
             out[f"dollar_cost_{pool}"] = cost

@@ -79,16 +79,21 @@ class Replica:
                  store: Optional[InMemoryStore] = None,
                  ready_at: float = 0.0, seed: int = 0,
                  decode_block: int = 4, prefill_mode: str = "chunked",
-                 endpoint: Optional[MigrationEndpoint] = None):
+                 endpoint: Optional[MigrationEndpoint] = None,
+                 engine_kwargs: Optional[dict] = None):
         self.rid = rid
         self.itype = itype
         self.decode_block = max(int(decode_block), 1)
+        # engine_kwargs passes cache tuning straight through (e.g.
+        # cache_mode="paged", block_size, kv_pool_blocks) without the
+        # replica layer growing one parameter per engine knob
         self.engine = ServingEngine(cfg, params, batch_size=batch_size,
                                     max_seq=max_seq,
                                     temperature=temperature,
                                     seed=seed + rid,
                                     prefill_mode=prefill_mode,
-                                    decode_block=self.decode_block)
+                                    decode_block=self.decode_block,
+                                    **(engine_kwargs or {}))
         self.monitor = monitor
         self.store = store or InMemoryStore()
         # migration staging: accelerator hosts keep the round trip

@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import (gather_pages,
+                                               paged_attention_ref)

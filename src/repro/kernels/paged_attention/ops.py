@@ -1,0 +1,39 @@
+"""jit'd paged-attention entry point (decode layout: one token per lane).
+
+``impl`` dispatch mirrors ``kernels.flash_attention.ops``:
+
+* ``"ref"``    — gather-through-the-block-table + ``full_attention``;
+  *bit-identical* to the dense decode path (the serving engine's paged
+  mode uses this on CPU backends so paged and dense engines emit the
+  same token streams).
+* ``"kernel"`` — the Pallas kernel (interpret-mode off TPU), validated
+  against the ref in tests.
+* ``"auto"``   — kernel on TPU, ref elsewhere (interpret-mode Pallas in
+  the fused decode hot loop would be pure overhead on CPU).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention as \
+    _paged_kernel
+from repro.kernels.paged_attention.ref import gather_pages, \
+    paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                    impl: str = "auto"):
+    """q: (B, H, D); pools: (num_blocks, bs, KV, D); block_tables:
+    (B, max_blocks) int32 (sentinel entries allowed — clamped here);
+    kv_len: (B,) int32.  Returns (B, H, D)."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, k_pool, v_pool, block_tables, kv_len)
+    nb = k_pool.shape[0]
+    bt = jnp.clip(block_tables, 0, nb - 1)
+    interpret = jax.default_backend() != "tpu"
+    return _paged_kernel(q, k_pool, v_pool, bt, kv_len,
+                         interpret=interpret)

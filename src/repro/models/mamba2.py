@@ -49,7 +49,8 @@ def mamba2_schema(cfg: ModelConfig, stacked: Optional[tuple] = None,
 
 
 # ----------------------------------------------------------------- SSD core
-def ssd_chunked(x, dt, A, B, C, chunk: int, impl: str = "jnp"):
+def ssd_chunked(x, dt, A, B, C, chunk: int, impl: str = "jnp",
+                init_state=None):
     """Chunked SSD scan.
 
     x:  (b, s, h, p)   — per-head inputs
@@ -57,6 +58,10 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, impl: str = "jnp"):
     A:  (h,)           — negative decay rates (A = -exp(A_log))
     B:  (b, s, n)      — input projection (single group, shared over heads)
     C:  (b, s, n)      — output projection
+    ``init_state`` (b, h, p, n) seeds the inter-chunk recurrence (zeros
+    when None) — block-boundary continuation for multi-chunk prefill:
+    prefilling ``s`` tokens from a carried state is exactly equivalent
+    to one longer prefill over history + chunk.
     Returns y: (b, s, h, p), final_state: (b, h, p, n).
     """
     b, s, h, p = x.shape
@@ -86,7 +91,8 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, impl: str = "jnp"):
         new = state * decay[..., None, None] + st_c
         return new, state                          # emit state *entering* chunk
 
-    init = jnp.zeros((b, h, p, n), f32)
+    init = jnp.zeros((b, h, p, n), f32) if init_state is None \
+        else init_state.astype(f32)
     final_state, prev_states = jax.lax.scan(
         scan_fn, init,
         (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
@@ -144,12 +150,18 @@ def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
 
 
 def mamba2_block(p, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
-                 impl: str = "jnp", active=None):
+                 impl: str = "jnp", active=None,
+                 init_ssm=None, init_conv=None):
     """Full Mamba2 block. x: (b, s, d).
 
     Training/prefill: ssm_state/conv_state None -> chunked SSD.
     Decode: states provided (s==1) -> recurrent update; returns
     (out, (ssm_state, conv_state)).
+
+    ``init_ssm`` (b,h,p,n) / ``init_conv`` (b,W-1,conv_dim) seed the
+    prefill branch for state-continued (multi-chunk) prefill: chunk i+1
+    starts from chunk i's final states, exactly equivalent to one long
+    prefill over the concatenated token stream.
     """
     dt_c = jnp.dtype(cfg.compute_dtype)
     b, s, d = x.shape
@@ -168,14 +180,15 @@ def mamba2_block(p, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None,
     decoding = ssm_state is not None
     xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(dt_c),
                                  p["conv_b"].astype(dt_c),
-                                 conv_state if decoding else None)
+                                 conv_state if decoding else init_conv)
     xs, B, C = jnp.split(xBC, [d_inner, d_inner + n], axis=-1)
     xh = xs.reshape(b, s, nheads, hp)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (h,)
 
     if not decoding:
         y, final_state = ssd_chunked(xh, dt, A, B, C,
-                                     min(cfg.ssm_chunk, s), impl=impl)
+                                     min(cfg.ssm_chunk, s), impl=impl,
+                                     init_state=init_ssm)
         new_ssm = final_state
         # new_conv (the last W-1 pre-conv activations) enables exact
         # streaming decode right after a chunked prefill

@@ -516,9 +516,16 @@ def init_sample_state(cfg: ModelConfig, shape: ShapeConfig,
 
 def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
                      temperature: float = 0.0, unroll: bool = False,
-                     eos_token: Optional[int] = None):
+                     eos_token: Optional[int] = None, serve_step=None):
     """Fused sample-and-advance decode: ``n_steps`` serve_steps in ONE
     dispatch, sampling and continuous-batching bookkeeping on device.
+
+    ``serve_step`` injects an alternative per-token step with the same
+    calling convention (paged-cache engines pass
+    ``make_paged_serve_step``'s); the sampling/bookkeeping body treats
+    the cache state opaquely, so dense and paged loops share it —
+    which is what makes their token streams bit-identical by
+    construction.
 
     Returns ``fn(params, DecodeState, SampleState, prompt_buf) ->
     (DecodeState, SampleState)``.  Per inner step, each active slot feeds
@@ -534,7 +541,8 @@ def make_decode_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
     non-early-exit loop — the extra done condition only fires on the step
     that produced the EOS sample.
     """
-    serve_step = make_serve_step(cfg, shape, unroll=unroll)
+    if serve_step is None:
+        serve_step = make_serve_step(cfg, shape, unroll=unroll)
     B, S = shape.global_batch, shape.seq_len
 
     def decode_loop(params, state: DecodeState, sample: SampleState,
@@ -672,3 +680,295 @@ def make_serve_step(cfg: ModelConfig, shape: ShapeConfig,
         return logits, DecodeState(new_cache, clen + active)
 
     return serve_step
+
+
+# ============================================================ paged cache
+class PagedDecodeState(NamedTuple):
+    """Decode state over a *paged* KV cache (vLLM-style block pool).
+
+    KV leaves are one shared pool ``(..., num_blocks, block_size, KV, D)``
+    instead of dense per-lane columns; each lane addresses its logical
+    positions through ``block_tables`` (B, max_blocks) of physical pool
+    rows.  Unallocated table entries hold the sentinel ``num_blocks``
+    (out of range): gathers clamp it (garbage always masked by kv_len /
+    causality), scatters drop it (``mode="drop"``) — so stale tables can
+    never corrupt live blocks.  Recurrent leaves (ssm/conv) are O(1) per
+    lane and stay lane-indexed.
+    """
+    cache: Any
+    cache_len: jax.Array     # (B,) filled positions
+    block_tables: jax.Array  # (B, max_blocks) int32 physical pool rows
+
+
+def paged_kv_keys(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Cache keys stored in the block pool (vs. per-lane recurrent)."""
+    if cfg.family in ("dense", "moe"):
+        return ("k", "v")
+    if cfg.family == "ssm":
+        return ()
+    if cfg.family == "hybrid":
+        return ("k", "v")
+    raise ValueError(cfg.family)
+
+
+def abstract_paged_decode_state(cfg: ModelConfig, shape: ShapeConfig,
+                                block_size: int, num_blocks: int):
+    """Paged analogue of ``abstract_decode_state``.
+
+    ``shape.global_batch`` is the number of decode *lanes* (concurrent
+    slots); pool memory is ``num_blocks`` x ``block_size`` kv columns,
+    decoupled from lanes x seq_len — the whole point of paging.  Only
+    ``BULK_PREFILL_FAMILIES`` minus enc_dec/vlm are supported (the
+    serving engine's admission path).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    assert S % block_size == 0, (S, block_size)
+    mb = S // block_size
+    bf16 = jnp.bfloat16
+    KV, D = cfg.num_kv_heads, cfg.head_dim
+    d_inner, nheads, conv_dim, _ = ssm_lib.mamba2_dims(cfg)
+    N, P_ = cfg.ssm_state, cfg.ssm_head_dim
+
+    def sds(shp, dt=bf16):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if cfg.family in ("dense", "moe"):
+        cache = {"k": sds((cfg.num_layers, num_blocks, block_size, KV, D)),
+                 "v": sds((cfg.num_layers, num_blocks, block_size, KV, D))}
+    elif cfg.family == "ssm":
+        cache = {"ssm": sds((cfg.num_layers, B, nheads, P_, N), jnp.float32),
+                 "conv": sds((cfg.num_layers, B, cfg.conv_width - 1,
+                              conv_dim))}
+    elif cfg.family == "hybrid":
+        periods = cfg.num_layers // cfg.attn_every
+        cache = {"ssm": sds((periods, cfg.attn_every, B, nheads, P_, N),
+                            jnp.float32),
+                 "conv": sds((periods, cfg.attn_every, B,
+                              cfg.conv_width - 1, conv_dim)),
+                 "k": sds((periods, num_blocks, block_size, KV, D)),
+                 "v": sds((periods, num_blocks, block_size, KV, D))}
+    else:
+        raise ValueError(f"paged cache unsupported for {cfg.family}")
+    return PagedDecodeState(cache,
+                            jax.ShapeDtypeStruct((B,), jnp.int32),
+                            jax.ShapeDtypeStruct((B, mb), jnp.int32))
+
+
+def init_paged_decode_state(cfg: ModelConfig, shape: ShapeConfig,
+                            block_size: int,
+                            num_blocks: int) -> PagedDecodeState:
+    ab = abstract_paged_decode_state(cfg, shape, block_size, num_blocks)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), ab.cache)
+    B, mb = ab.block_tables.shape
+    return PagedDecodeState(
+        cache, jnp.zeros((B,), jnp.int32),
+        jnp.full((B, mb), num_blocks, jnp.int32))   # all-sentinel tables
+
+
+def make_paged_serve_step(cfg: ModelConfig, shape: ShapeConfig,
+                          block_size: int, num_blocks: int,
+                          unroll: bool = False, impl: str = "auto"):
+    """Paged ``make_serve_step``: fn(params, PagedDecodeState, batch) ->
+    (logits, PagedDecodeState).  Same sampling-visible math as the dense
+    step — the attention core is bit-identical on CPU backends and a
+    Pallas paged-attention kernel on TPU.
+    """
+
+    def serve_step(params, state: PagedDecodeState, batch):
+        tokens = batch["tokens"]            # (B, 1)
+        active = batch.get("active")
+        if active is None:
+            active = jnp.ones((tokens.shape[0],), jnp.int32)
+        act = active.astype(jnp.bool_)
+        h = T.embed_tokens(params, tokens, cfg)
+        cache, clen, bt = state.cache, state.cache_len, state.block_tables
+
+        if cfg.family in ("dense", "moe"):
+            def body(carry, xs):
+                x = carry
+                lp, pk, pv = xs
+                x, (pk, pv) = L.paged_decode_attention(
+                    lp["attn"], x, cfg, pool_k=pk, pool_v=pv,
+                    block_tables=bt, cache_len=clen, active=act, impl=impl)
+                if cfg.family == "moe":
+                    from repro.models import moe as moe_lib
+                    x, _ = moe_lib.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = L.swiglu_block(lp["mlp"], x, cfg)
+                return x, (pk, pv)
+            h, (ks, vs) = _scan(
+                body, h, (params["layers"], cache["k"], cache["v"]),
+                unroll=unroll)
+            new_cache = {"k": ks, "v": vs}
+        elif cfg.family == "ssm":
+            def body(carry, xs):
+                x = carry
+                lp, st, cs = xs
+                x, (st, cs) = ssm_lib.mamba2_block(
+                    lp, x, cfg, ssm_state=st, conv_state=cs, active=act)
+                return x, (st, cs)
+            h, (ssm, conv) = _scan(
+                body, h, (params["layers"], cache["ssm"], cache["conv"]),
+                unroll=unroll)
+            new_cache = {"ssm": ssm, "conv": conv}
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+            def period_body(carry, xs):
+                x = carry
+                pp, st, cs, pk, pv = xs
+                def inner(c, ys):
+                    lp, s1, c1 = ys
+                    c, (s1, c1) = ssm_lib.mamba2_block(
+                        lp, c, cfg, ssm_state=s1, conv_state=c1, active=act)
+                    return c, (s1, c1)
+                x, (st, cs) = _scan(inner, x, (pp, st, cs), unroll=unroll)
+                x, (pk, pv) = L.paged_decode_attention(
+                    shared["attn"], x, cfg, pool_k=pk, pool_v=pv,
+                    block_tables=bt, cache_len=clen, active=act, impl=impl)
+                x = L.swiglu_block(shared["mlp"], x, cfg)
+                return x, (st, cs, pk, pv)
+            h, (ssm, conv, ks, vs) = _scan(
+                period_body, h,
+                (params["mamba"], cache["ssm"], cache["conv"],
+                 cache["k"], cache["v"]), unroll=unroll)
+            new_cache = {"ssm": ssm, "conv": conv, "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        logits = T.lm_logits(params, h, cfg)
+        return logits, PagedDecodeState(new_cache, clen + active, bt)
+
+    return serve_step
+
+
+def make_paged_decode_loop(cfg: ModelConfig, shape: ShapeConfig,
+                           n_steps: int, block_size: int, num_blocks: int,
+                           temperature: float = 0.0,
+                           eos_token: Optional[int] = None,
+                           impl: str = "auto"):
+    """``make_decode_loop`` over a paged cache — shares the exact
+    sampling/bookkeeping body, so token streams match dense decode
+    bit-for-bit."""
+    step = make_paged_serve_step(cfg, shape, block_size, num_blocks,
+                                 impl=impl)
+    return make_decode_loop(cfg, shape, n_steps, temperature=temperature,
+                            eos_token=eos_token, serve_step=step)
+
+
+def make_paged_bulk_prefill(cfg: ModelConfig, shape: ShapeConfig,
+                            chunk: int, block_size: int, num_blocks: int,
+                            first_chunk: bool = False):
+    """State-continued chunk prefill into one slot of a paged cache.
+
+    Returns ``fn(params, state, tokens, slot, off, n_real) ->
+    PagedDecodeState``: prefills a ``(1, chunk)`` token buffer whose
+    first token sits at absolute position ``off`` of slot ``slot``.
+    Attention kv lands in the slot's blocks through its table (a
+    block-table append); attention reads causally over history + chunk
+    (prefill-with-history).  Recurrent (ssm/conv) leaves continue from
+    the slot's carried state — zeros when ``off == 0`` — via the SSD
+    ``init_state`` threading, which is exactly equivalent to one long
+    prefill over the concatenated chunks.  Sets
+    ``cache_len[slot] = off + n_real``.
+
+    ``slot``/``off``/``n_real`` are traced: one compiled function per
+    (cfg, shape, chunk bucket, block geometry) covers every slot,
+    chunk index, and real length.  ``first_chunk=True`` specializes the
+    compiled function for ``off == 0`` (fresh admission, the hot case
+    under churn): the kv attention skips the history gather — every
+    gathered position would be masked — and recurrent leaves start from
+    literal zeros instead of a gather-and-select.
+    """
+    assert cfg.family in BULK_PREFILL_FAMILIES, cfg.family
+    mb = shape.seq_len // block_size
+
+    def paged_prefill(params, state: PagedDecodeState, tokens, slot, off,
+                      n_real):
+        def take_lane(leaf, ax):
+            return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+
+        cache, bt = state.cache, state.block_tables
+        bt_row = jax.lax.dynamic_slice(bt, (slot, 0), (1, mb))[0]
+        first = off == 0
+        h = T.embed_tokens(params, tokens, cfg)
+        new_cache = dict(cache)
+
+        if cfg.family in ("dense", "moe"):
+            def body(carry, xs):
+                x = carry
+                lp, pk, pv = xs
+                x, pk, pv = L.paged_chunk_attention(
+                    lp["attn"], x, cfg, pool_k=pk, pool_v=pv,
+                    bt_row=bt_row, off=off, history=not first_chunk)
+                if cfg.family == "moe":
+                    from repro.models import moe as moe_lib
+                    x, _ = moe_lib.moe_block(lp["moe"], x, cfg)
+                else:
+                    x = L.swiglu_block(lp["mlp"], x, cfg)
+                return x, (pk, pv)
+            _, (ks, vs) = jax.lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs}
+        elif cfg.family == "ssm":
+            if first_chunk:
+                ssm0 = jnp.zeros_like(take_lane(cache["ssm"], 1))
+                conv0 = jnp.zeros_like(take_lane(cache["conv"], 1))
+            else:
+                ssm0 = jnp.where(first, 0.0, take_lane(cache["ssm"], 1))
+                conv0 = jnp.where(first, 0, take_lane(cache["conv"], 1))
+            def body(carry, xs):
+                x = carry
+                lp, s0, c0 = xs
+                x, (st, cv) = ssm_lib.mamba2_block(
+                    lp, x, cfg, init_ssm=s0, init_conv=c0)
+                return x, (st, cv)
+            _, (ssm, conv) = jax.lax.scan(
+                body, h, (params["layers"], ssm0, conv0))
+            new_cache = {
+                "ssm": jax.lax.dynamic_update_slice(
+                    cache["ssm"], ssm.astype(cache["ssm"].dtype),
+                    (0, slot, 0, 0, 0)),
+                "conv": jax.lax.dynamic_update_slice(
+                    cache["conv"], conv.astype(cache["conv"].dtype),
+                    (0, slot, 0, 0))}
+        elif cfg.family == "hybrid":
+            if first_chunk:
+                ssm0 = jnp.zeros_like(take_lane(cache["ssm"], 2))
+                conv0 = jnp.zeros_like(take_lane(cache["conv"], 2))
+            else:
+                ssm0 = jnp.where(first, 0.0, take_lane(cache["ssm"], 2))
+                conv0 = jnp.where(first, 0, take_lane(cache["conv"], 2))
+            shared = params["shared"]
+            def period_body(carry, xs):
+                x = carry
+                pp, s0, c0, pk, pv = xs
+                def inner(c, ys):
+                    lp, s1, c1 = ys
+                    c, (st, cv) = ssm_lib.mamba2_block(
+                        lp, c, cfg, init_ssm=s1, init_conv=c1)
+                    return c, (st, cv)
+                x, (sts, cvs) = jax.lax.scan(inner, x, (pp, s0, c0))
+                x, pk, pv = L.paged_chunk_attention(
+                    shared["attn"], x, cfg, pool_k=pk, pool_v=pv,
+                    bt_row=bt_row, off=off, history=not first_chunk)
+                x = L.swiglu_block(shared["mlp"], x, cfg)
+                return x, (sts, cvs, pk, pv)
+            _, (ssm, conv, ks, vs) = jax.lax.scan(
+                period_body, h,
+                (params["mamba"], ssm0, conv0, cache["k"], cache["v"]))
+            new_cache = {
+                "ssm": jax.lax.dynamic_update_slice(
+                    cache["ssm"], ssm.astype(cache["ssm"].dtype),
+                    (0, 0, slot, 0, 0, 0)),
+                "conv": jax.lax.dynamic_update_slice(
+                    cache["conv"], conv.astype(cache["conv"].dtype),
+                    (0, 0, slot, 0, 0)),
+                "k": ks, "v": vs}
+        else:
+            raise ValueError(cfg.family)
+
+        cache_len = state.cache_len.at[slot].set(
+            jnp.asarray(off + n_real, jnp.int32))
+        return PagedDecodeState(new_cache, cache_len, bt)
+
+    return paged_prefill

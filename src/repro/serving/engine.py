@@ -27,6 +27,22 @@ The hot path is built around three properties:
   ``maxfed``), so steady-state decode performs **zero device->host
   transfers**; ``out_buf`` is fetched only when the projection says a
   slot completed, or at a drain.  ``host_syncs`` counts every fetch.
+* **Paged KV cache** (``cache_mode="paged"``) — kv leaves live in ONE
+  device-resident block pool (``kv_pool_blocks`` x ``block_size``
+  columns) instead of dense per-lane ``max_seq`` strips; each slot
+  addresses its logical positions through a per-lane block table
+  (vLLM-style paging, served by the Pallas kernel in
+  ``kernels/paged_attention``).  A ``BlockAllocator`` reserves a slot's
+  whole block budget at admission and frees it at retire/pack, so the
+  fused decode window never needs a mid-flight allocation — steady-state
+  decode stays zero-sync.  Admission is capacity-gated on free blocks
+  (not just free lanes): with short requests the same pool memory
+  sustains more concurrent slots than ``batch_size`` dense lanes, and
+  prompts longer than the largest prefill bucket are fed by *multiple*
+  state-continued chunk prefills (block-table appends), subsuming
+  prefill-with-history.  Token streams are bit-identical to the dense
+  engine — paged and dense loops share the exact sampling body and the
+  attention cores agree bit-for-bit (asserted in tests).
 * **Migratable work units** — ``pack()`` captures each occupied slot
   (request progress + that slot's KV/state cache columns, as host
   arrays) into a self-contained ``WorkUnit``; ``unpack()`` admits units
@@ -108,7 +124,16 @@ def request_cost(req: Request,
 
 @dataclasses.dataclass
 class SlotSnapshot:
-    """A checkpointed in-flight request: enough to resume decode anywhere."""
+    """A checkpointed in-flight request: enough to resume decode anywhere.
+
+    ``cache`` holds the slot's columns in ONE canonical layout — full
+    contiguous ``max_seq`` sequence axes — whatever cache mode produced
+    it: a paged engine gathers the slot's blocks through its table into
+    the contiguous column on ``pack`` and re-blocks into its own
+    geometry on ``unpack``.  Snapshots therefore migrate between dense
+    and paged engines, and between paged engines with *different block
+    sizes*, bit-identically (asserted in tests/test_paged.py).
+    """
     request: Request
     fed: int                    # prompt+generated tokens already in cache
     next_tok: int               # next token to feed
@@ -128,11 +153,70 @@ class SlotSnapshot:
         return rem_prefill * discount + (rem - rem_prefill)
 
 
+class BlockAllocator:
+    """Free-list allocator over the paged cache's physical block pool.
+
+    Pure host-side bookkeeping (no jax): a slot's whole reservation is
+    taken in one ``allocate`` at admission and returned in one
+    ``release`` at retire/pack — there is no incremental growth, which
+    is what keeps the fused decode window dispatch-free.  Invariants
+    (property-tested): every block is either free or owned by exactly
+    one slot; ``allocate`` on an owning slot and ``release`` on a
+    non-owning slot raise (leak/double-free detection, not silence).
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = int(num_blocks)
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+        self._owned: Dict[int, Tuple[int, ...]] = {}
+        self.peak_in_use = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def owned(self, slot: int) -> Tuple[int, ...]:
+        return self._owned.get(slot, ())
+
+    def allocate(self, slot: int, n: int) -> Tuple[int, ...]:
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns blocks (leak)")
+        if n > len(self._free):
+            raise ValueError(
+                f"pool exhausted: want {n}, free {len(self._free)}")
+        blocks = tuple(self._free.pop() for _ in range(max(n, 0)))
+        self._owned[slot] = blocks
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return blocks
+
+    def release(self, slot: int) -> Tuple[int, ...]:
+        if slot not in self._owned:
+            raise ValueError(f"slot {slot} owns no blocks (double free)")
+        blocks = self._owned.pop(slot)
+        self._free.extend(reversed(blocks))
+        return blocks
+
+    def check_invariants(self):
+        """Raises unless free + owned exactly partition the pool."""
+        free = set(self._free)
+        owned = [b for bs in self._owned.values() for b in bs]
+        assert len(free) == len(self._free), "duplicate free blocks"
+        assert len(set(owned)) == len(owned), "block owned twice"
+        assert not (free & set(owned)), "block both free and owned"
+        assert len(free) + len(owned) == self.num_blocks, "blocks leaked"
+
+
 # One jitted fn per (cfg, shape[, bucket/block]): replicas in a cluster
 # share the compiled graphs instead of recompiling per engine.
-_LOOP_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int, float,
-                        Optional[int]], Any] = {}
-_PREFILL_CACHE: Dict[Tuple[ModelConfig, ShapeConfig, int], Any] = {}
+_LOOP_CACHE: Dict[Tuple, Any] = {}
+_PREFILL_CACHE: Dict[Tuple, Any] = {}
 
 
 def _shared_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
@@ -154,15 +238,72 @@ def _shared_bulk_prefill(cfg: ModelConfig, shape: ShapeConfig, chunk: int):
     return _PREFILL_CACHE[key]
 
 
+def _shared_paged_loop(cfg: ModelConfig, shape: ShapeConfig, n_steps: int,
+                       temperature: float, eos_token: Optional[int],
+                       block_size: int, num_blocks: int):
+    key = ("paged", cfg, shape, n_steps, float(temperature), eos_token,
+           block_size, num_blocks)
+    if key not in _LOOP_CACHE:
+        _LOOP_CACHE[key] = jax.jit(
+            zoo.make_paged_decode_loop(cfg, shape, n_steps, block_size,
+                                       num_blocks, temperature,
+                                       eos_token=eos_token),
+            donate_argnums=(1, 2))
+    return _LOOP_CACHE[key]
+
+
+def _shared_paged_prefill(cfg: ModelConfig, shape: ShapeConfig, chunk: int,
+                          block_size: int, num_blocks: int,
+                          first: bool = False):
+    key = ("paged", cfg, shape, chunk, block_size, num_blocks, first)
+    if key not in _PREFILL_CACHE:
+        _PREFILL_CACHE[key] = jax.jit(
+            zoo.make_paged_bulk_prefill(cfg, shape, chunk, block_size,
+                                        num_blocks, first_chunk=first),
+            donate_argnums=(1,))
+    return _PREFILL_CACHE[key]
+
+
+def _slot_write(sample, prompt_buf, slot, next_tok, fed, plen, maxfed,
+                active, prompt_row):
+    """Fused slot (re)initialization: every per-slot sample field + the
+    prompt row in ONE dispatch.  Admission used to issue seven eager
+    device scatters per slot; under churn that dominated the decode loop
+    itself, so the whole write is a single donated jit call."""
+    sample = zoo.SampleState(
+        next_tok=sample.next_tok.at[slot, 0].set(next_tok),
+        active=sample.active.at[slot].set(active),
+        fed=sample.fed.at[slot].set(fed),
+        plen=sample.plen.at[slot].set(plen),
+        maxfed=sample.maxfed.at[slot].set(maxfed),
+        out_buf=sample.out_buf.at[slot].set(0),
+        rng=sample.rng)
+    return sample, prompt_buf.at[slot].set(prompt_row)
+
+
+_SLOT_WRITE = jax.jit(_slot_write, donate_argnums=(0, 1))
+
+
+def _table_write(bt, slot, row):
+    return bt.at[slot].set(row)
+
+
+_TABLE_WRITE = jax.jit(_table_write, donate_argnums=(0,))
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  max_seq: int = 128, temperature: float = 0.0, seed: int = 0,
                  prefill_mode: str = "chunked",
                  prefill_buckets: Tuple[int, ...] = DEFAULT_PREFILL_BUCKETS,
                  prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
-                 decode_block: int = 8, eos_token: Optional[int] = None):
+                 decode_block: int = 8, eos_token: Optional[int] = None,
+                 cache_mode: str = "dense", block_size: int = 16,
+                 kv_pool_blocks: Optional[int] = None):
         if prefill_mode not in ("chunked", "streamed"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if cache_mode not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -177,8 +318,37 @@ class ServingEngine:
         # reconcile against device truth after every window (one fetch
         # per window instead of zero; the saved fused steps dominate).
         self.eos_token = eos_token
+        self.cache_mode = cache_mode
         self.shape = ShapeConfig("serve", max_seq, batch_size, "decode")
-        self.state = zoo.init_decode_state(cfg, self.shape, fill_len=0)
+        if cache_mode == "paged":
+            if max_seq % block_size:
+                raise ValueError(
+                    f"max_seq={max_seq} not a multiple of "
+                    f"block_size={block_size}")
+            self.block_size = block_size
+            self.max_blocks = max_seq // block_size
+            # default pool = exactly the dense engine's kv memory; pass a
+            # smaller pool to trade ceiling for memory (admission gates
+            # on free blocks, so it degrades to queueing, never OOM)
+            self.pool_blocks = (batch_size * self.max_blocks
+                                if kv_pool_blocks is None
+                                else int(kv_pool_blocks))
+            self.state = zoo.init_paged_decode_state(
+                cfg, self.shape, block_size, self.pool_blocks)
+            self._alloc: Optional[BlockAllocator] = BlockAllocator(
+                self.pool_blocks)
+            # host mirror of the device block tables: pack() and the
+            # allocator invariants read this; the device copy is kept in
+            # lockstep by ONE fused row-write dispatch per admission
+            # (releases update only the mirror — see _release_blocks)
+            self._tables = np.full((batch_size, self.max_blocks),
+                                   self.pool_blocks, np.int32)
+        else:
+            self.block_size = 0
+            self.pool_blocks = 0
+            self.state = zoo.init_decode_state(cfg, self.shape, fill_len=0)
+            self._alloc = None
+            self._tables = None
         self.sample = zoo.init_sample_state(cfg, self.shape, seed=seed)
         self._prompt_buf = jnp.zeros((batch_size, max_seq), jnp.int32)
         self._slots: List[Optional[Request]] = [None] * batch_size
@@ -202,6 +372,7 @@ class ServingEngine:
         self.chunk_prefills = 0     # bulk prefill dispatches issued
         self.preemptions = 0        # slots paused via preempt()
         self.resumes = 0            # paused units re-admitted via resume()
+        self._peak_slots = 0        # high-water concurrent occupied slots
         self._chunk_tokens_pending = 0
         if prefill_mode == "chunked" and cfg.family in zoo.BULK_PREFILL_FAMILIES:
             self._buckets = tuple(sorted(
@@ -245,7 +416,84 @@ class ServingEngine:
 
     @property
     def free_slots(self) -> int:
-        return self.batch - self.n_active
+        """Admittable-request capacity (what the router/EDF simulate).
+
+        Dense: free lanes.  Paged: also bounded by free pool blocks —
+        a lane without blocks to back it cannot admit — estimated at the
+        per-request block need of the engine's own pending work (falling
+        back to the mean reservation of running slots, then to a whole
+        ``max_seq`` worth: the conservative dense-equivalent).
+        """
+        lanes = self.batch - self.n_active
+        if self._alloc is None or lanes == 0:
+            return lanes
+        est = self._est_blocks_per_request()
+        return min(lanes, self._alloc.free_count // max(est, 1))
+
+    def _est_blocks_per_request(self) -> int:
+        reqs = [u.snapshot.request for u in self._restore] + self._queue
+        if reqs:
+            need = [self._blocks_needed(self._req_maxfed(r)) for r in reqs]
+            return max(1, round(sum(need) / len(need)))
+        owned = [len(self._alloc.owned(s)) for s, r in
+                 enumerate(self._slots) if r is not None]
+        if owned:
+            return max(1, round(sum(owned) / len(owned)))
+        return self.max_blocks
+
+    def occupancy(self) -> Dict[str, int]:
+        """Slot/block occupancy counters (threaded into cluster metrics).
+
+        ``max_concurrent_slots`` is the high-water mark of simultaneously
+        occupied slots; ``peak_blocks_in_use`` the pool's high-water
+        block usage (both 0-pool for dense engines).
+        """
+        return {
+            "active_slots": self.n_active,
+            "max_concurrent_slots": self._peak_slots,
+            "blocks_in_use": self._alloc.in_use if self._alloc else 0,
+            "peak_blocks_in_use":
+                self._alloc.peak_in_use if self._alloc else 0,
+            "pool_blocks": self.pool_blocks,
+        }
+
+    # ----------------------------------------------------- block lifecycle
+    def _req_maxfed(self, req: Request) -> int:
+        return min(len(req.prompt) + req.max_new_tokens - 1,
+                   self.max_seq - 1)
+
+    def _blocks_needed(self, maxfed: int) -> int:
+        """Blocks covering every position a slot will ever write.
+
+        Decode writes kv at positions ``0 .. maxfed-1`` (the token fed
+        when ``fed == maxfed-1`` is the last one entering the cache), so
+        ``ceil(maxfed / block_size)`` blocks reserved up front make the
+        fused window allocation-free.
+        """
+        return max(1, -(-int(maxfed) // self.block_size))
+
+    def _write_table_row(self, slot: int, blocks: Tuple[int, ...]):
+        """Install ``slot``'s block mapping: host mirror + ONE fused
+        device dispatch (sentinel-fill past the mapped prefix).  The
+        mirror is what ``pack`` and the allocator invariants read; the
+        device row is what every decode/prefill dispatch routes
+        through."""
+        self._tables[slot] = self.pool_blocks       # sentinel-fill
+        self._tables[slot, :len(blocks)] = blocks
+        self.state = self.state._replace(
+            block_tables=_TABLE_WRITE(self.state.block_tables,
+                                      np.int32(slot), self._tables[slot]))
+
+    def _release_blocks(self, slot: int):
+        """Return a retiring slot's blocks and sentinel its host table
+        row.  The *device* row is left stale on purpose: a retired lane
+        is ``active=0``, so its decode writes are routed to the drop
+        sentinel by the active mask and its (clamped) gathers are
+        discarded — and the row is rewritten by ``_write_table_row``
+        before the slot is ever dispatched again.  Skipping the device
+        sentinel write keeps retirement free of device dispatches."""
+        self._alloc.release(slot)
+        self._tables[slot] = self.pool_blocks
 
     def fed_tokens(self, slot: int) -> int:
         """Tokens already in ``slot``'s cache (exact, no device sync)."""
@@ -300,7 +548,8 @@ class ServingEngine:
         return out
 
     # ------------------------------------------------------------ admission
-    def _pick_chunk(self, n_prefill: int) -> Tuple[int, int]:
+    def _pick_chunk(self, n_prefill: int,
+                    room: Optional[int] = None) -> Tuple[int, int]:
         """Bulk-prefill bucket for ``n_prefill`` prompt tokens.
 
         Returns ``(bucket, n_real)`` — ``bucket`` = 0 means stream.
@@ -308,85 +557,176 @@ class ServingEngine:
         that covers the prompt and right-pad it; recurrent families take
         the largest fully-real bucket so no pad token ever enters the
         state recurrence.
+
+        ``room`` caps the bucket at the cache positions left past the
+        chunk's start offset (multi-chunk prefill mid-prompt): a padded
+        bucket larger than the room would spill the write past the end
+        of the slot's logical range.  When no covering bucket fits, a
+        fully-real bucket is used instead (and the next round handles
+        the remainder).
         """
         if not self._buckets or n_prefill <= 0:
             return 0, 0
+        room = self.max_seq if room is None else room
         if self.cfg.family in zoo.PAD_SAFE_FAMILIES:
             for c in self._buckets:
-                if c >= n_prefill:
+                if n_prefill <= c <= room:
                     return c, n_prefill
-            return self._buckets[-1], self._buckets[-1]
+            best = 0
+            for c in self._buckets:
+                if c <= min(n_prefill, room):
+                    best = c
+            return best, best
         best = 0
         chunk = max(self.cfg.ssm_chunk, 1)
         for c in self._buckets:
-            if c <= n_prefill and (c <= chunk or c % chunk == 0):
+            if c <= min(n_prefill, room) and (c <= chunk or c % chunk == 0):
                 best = c
         return best, best
 
     def _set_cache_len(self, slot: int, value: int):
-        self.state = zoo.DecodeState(
-            self.state.cache, self.state.cache_len.at[slot].set(value))
+        self.state = self.state._replace(
+            cache_len=self.state.cache_len.at[slot].set(value))
 
     def _set_sample_row(self, slot: int, *, next_tok: int, fed: int,
-                        plen: int, maxfed: int, active: int = 1):
-        s = self.sample
-        self.sample = zoo.SampleState(
-            next_tok=s.next_tok.at[slot, 0].set(next_tok),
-            active=s.active.at[slot].set(active),
-            fed=s.fed.at[slot].set(fed),
-            plen=s.plen.at[slot].set(plen),
-            maxfed=s.maxfed.at[slot].set(maxfed),
-            out_buf=s.out_buf.at[slot].set(0),
-            rng=s.rng)
+                        plen: int, maxfed: int, prompt: np.ndarray,
+                        active: int = 1):
+        row = np.zeros(self.max_seq, np.int32)
+        row[:len(prompt)] = prompt
+        self.sample, self._prompt_buf = _SLOT_WRITE(
+            self.sample, self._prompt_buf, np.int32(slot),
+            np.int32(next_tok), np.int32(fed), np.int32(plen),
+            np.int32(maxfed), np.int32(active), row)
         self._fed[slot] = fed
         self._plen[slot] = plen
         self._maxfed[slot] = maxfed
         self._next_tok_host[slot] = next_tok
 
-    def _set_prompt_row(self, slot: int, prompt: np.ndarray):
-        row = np.zeros(self.max_seq, np.int32)
-        row[:len(prompt)] = prompt
-        self._prompt_buf = self._prompt_buf.at[slot].set(jnp.asarray(row))
-
     def _admit_fresh(self, req: Request, slot: int):
         P = len(req.prompt)
-        maxfed = min(P + req.max_new_tokens - 1, self.max_seq - 1)
-        self._set_prompt_row(slot, req.prompt)
-        chunk, n_real = self._pick_chunk(P - 1)
-        if chunk:
-            bulk = _shared_bulk_prefill(self.cfg, self.shape, chunk)
-            ctoks = np.zeros((1, chunk), np.int32)
-            ctoks[0, :n_real] = req.prompt[:n_real]
-            self.state = bulk(self.params, self.state, jnp.asarray(ctoks),
-                              np.int32(slot), np.int32(n_real))
-            self.chunk_prefills += 1
-            self._chunk_tokens_pending += n_real
+        maxfed = self._req_maxfed(req)
+        if self._alloc is not None:
+            blocks = self._alloc.allocate(slot, self._blocks_needed(maxfed))
+            self._write_table_row(slot, blocks)
+            n_fed = self._paged_chunk_prefills(req, slot, 0, P - 1)
         else:
-            self._set_cache_len(slot, 0)
+            chunk, n_real = self._pick_chunk(P - 1)
+            if chunk:
+                bulk = _shared_bulk_prefill(self.cfg, self.shape, chunk)
+                ctoks = np.zeros((1, chunk), np.int32)
+                ctoks[0, :n_real] = req.prompt[:n_real]
+                self.state = bulk(self.params, self.state,
+                                  jnp.asarray(ctoks), np.int32(slot),
+                                  np.int32(n_real))
+                self.chunk_prefills += 1
+                self._chunk_tokens_pending += n_real
+            else:
+                self._set_cache_len(slot, 0)
+            n_fed = n_real
         self._slots[slot] = req
         self._out_read[slot] = 0
-        self._set_sample_row(slot, next_tok=int(req.prompt[n_real]),
-                             fed=n_real, plen=P, maxfed=maxfed)
+        self._set_sample_row(slot, next_tok=int(req.prompt[n_fed]),
+                             fed=n_fed, plen=P, maxfed=maxfed,
+                             prompt=req.prompt)
+
+    def _paged_chunk_prefills(self, req: Request, slot: int, start: int,
+                              n_prefill: int) -> int:
+        """Feed ``req.prompt[start : start + n_prefill]`` into ``slot``
+        by state-continued chunk prefills (block-table appends).
+
+        Unlike the dense path (one chunk, remainder streamed through the
+        decode loop), prompts beyond the largest bucket keep appending
+        chunks — each attends causally over the history already in the
+        slot's blocks, and recurrent leaves carry the SSD/conv state
+        across the chunk boundary.  Returns the new fed count; if no
+        bucket fits the (remaining, room) pair the leftover streams.
+        """
+        off, remaining = start, n_prefill
+        while remaining > 0:
+            chunk, n_real = self._pick_chunk(remaining,
+                                             room=self.max_seq - off)
+            if not chunk:
+                break
+            bulk = _shared_paged_prefill(self.cfg, self.shape, chunk,
+                                         self.block_size, self.pool_blocks,
+                                         first=(off == 0))
+            ctoks = np.zeros((1, chunk), np.int32)
+            ctoks[0, :n_real] = req.prompt[off:off + n_real]
+            self.state = bulk(self.params, self.state,
+                              jnp.asarray(ctoks), np.int32(slot),
+                              np.int32(off), np.int32(n_real))
+            self.chunk_prefills += 1
+            self._chunk_tokens_pending += n_real
+            off += n_real
+            remaining -= n_real
+        if off == start:
+            self._set_cache_len(slot, start)
+        return off
 
     def _install(self, snap: SlotSnapshot, slot: int):
-        """Write a snapshot's cache columns into ``slot`` and resume it."""
-        new_cache = {}
-        for k, arr in self.state.cache.items():
-            ax = self._cache_axes[k]
-            idx = [slice(None)] * arr.ndim
-            idx[ax] = slot
-            new_cache[k] = arr.at[tuple(idx)].set(
-                jnp.asarray(snap.cache[k], arr.dtype))
-        self.state = zoo.DecodeState(new_cache, self.state.cache_len)
-        self._set_cache_len(slot, snap.cache_len)
+        """Write a snapshot's cache columns into ``slot`` and resume it.
+
+        Snapshots are *canonical contiguous* (full ``max_seq`` columns)
+        regardless of the source engine's cache mode or block size —
+        a paged engine re-blocks them into its own geometry here, which
+        is what makes dense<->paged and cross-block-size migration
+        round-trip bit-identically.
+        """
         req = snap.request
-        maxfed = min(len(req.prompt) + req.max_new_tokens - 1,
-                     self.max_seq - 1)
-        self._set_prompt_row(slot, req.prompt)
+        maxfed = self._req_maxfed(req)
+        if self._alloc is not None:
+            blocks = self._alloc.allocate(slot, self._blocks_needed(maxfed))
+            self._write_table_row(slot, blocks)
+            kv_keys = set(zoo.paged_kv_keys(self.cfg))
+            new_cache = {}
+            for k, arr in self.state.cache.items():
+                ax = self._cache_axes[k]
+                col = np.asarray(snap.cache[k])
+                if k in kv_keys:
+                    # contiguous column -> (max_blocks, block_size) at the
+                    # seq axis -> scatter the reserved prefix through the
+                    # fresh table (dense batch axis == paged block axis)
+                    sh = col.shape
+                    blocked = col.reshape(
+                        sh[:ax] + (self.max_blocks, self.block_size)
+                        + sh[ax + 1:])
+                    sel = blocked[(slice(None),) * ax
+                                  + (slice(0, len(blocks)),)]
+                    idx = [slice(None)] * arr.ndim
+                    idx[ax] = jnp.asarray(blocks, jnp.int32)
+                    new_cache[k] = arr.at[tuple(idx)].set(
+                        jnp.asarray(sel, arr.dtype))
+                else:
+                    idx = [slice(None)] * arr.ndim
+                    idx[ax] = slot
+                    new_cache[k] = arr.at[tuple(idx)].set(
+                        jnp.asarray(col, arr.dtype))
+            self.state = self.state._replace(cache=new_cache)
+        else:
+            new_cache = {}
+            for k, arr in self.state.cache.items():
+                ax = self._cache_axes[k]
+                idx = [slice(None)] * arr.ndim
+                idx[ax] = slot
+                new_cache[k] = arr.at[tuple(idx)].set(
+                    jnp.asarray(snap.cache[k], arr.dtype))
+            self.state = self.state._replace(cache=new_cache)
+        self._set_cache_len(slot, snap.cache_len)
         self._slots[slot] = req
         self._out_read[slot] = len(req.out_tokens)
         self._set_sample_row(slot, next_tok=snap.next_tok, fed=snap.fed,
-                             plen=len(req.prompt), maxfed=maxfed)
+                             plen=len(req.prompt), maxfed=maxfed,
+                             prompt=req.prompt)
+
+    def _can_admit(self, req: Request) -> bool:
+        """Paged admission gate: the head-of-queue request must fit the
+        free-block pool (FIFO — later requests don't jump a blocked
+        head, so admission order stays deterministic and starvation-free).
+        """
+        if self._alloc is None:
+            return True
+        return self._alloc.can_allocate(
+            self._blocks_needed(self._req_maxfed(req)))
 
     def _admit(self):
         """Fill free slots from the restore queue, then the request queue."""
@@ -394,6 +734,8 @@ class ServingEngine:
             if self._slots[slot] is not None:
                 continue
             if self._restore:
+                if not self._can_admit(self._restore[0].snapshot.request):
+                    break
                 u = self._restore.pop(0)
                 self._install(u.snapshot, slot)
                 # keep the unit's identity alive on the slot: a later
@@ -402,7 +744,10 @@ class ServingEngine:
                 # recorded while the slot runs lands on the right unit)
                 self._unit_meta[slot] = (u.uid, u.hops, u.origin)
             elif self._queue:
+                if not self._can_admit(self._queue[0]):
+                    break
                 self._admit_fresh(self._queue.pop(0), slot)
+        self._peak_slots = max(self._peak_slots, self.n_active)
 
     # ------------------------------------------------------------- stepping
     def step_many(self, n_steps: int) -> Dict[str, int]:
@@ -424,10 +769,15 @@ class ServingEngine:
             self.processed_tokens += stats["processed"]
             return stats
         before = {slot: int(self._fed[slot]) for slot in occupied}
-        loop = _shared_loop(self.cfg, self.shape, n_steps, self.temperature,
-                            self.eos_token)
-        self.state, self.sample = loop(self.params, self.state, self.sample,
-                                       self._prompt_buf)
+        if self._alloc is not None:
+            loop = _shared_paged_loop(self.cfg, self.shape, n_steps,
+                                      self.temperature, self.eos_token,
+                                      self.block_size, self.pool_blocks)
+        else:
+            loop = _shared_loop(self.cfg, self.shape, n_steps,
+                                self.temperature, self.eos_token)
+        self.state, self.sample = loop(self.params, self.state,
+                                       self.sample, self._prompt_buf)
         stats["steps"] = n_steps
         if self.eos_token is not None:
             # EOS can end a slot at any inner step, invisibly to the host
@@ -509,6 +859,10 @@ class ServingEngine:
                 self._completed.append(req)
                 self._slots[slot] = None
                 self._unit_meta.pop(slot, None)
+                if self._alloc is not None:
+                    # blocks return to the pool at the window boundary;
+                    # the next _admit can hand them to a queued request
+                    self._release_blocks(slot)
 
     # ----------------------------------------------- WorkUnit pack/unpack
     #
@@ -535,18 +889,40 @@ class ServingEngine:
             return []
         cache_host = {k: np.asarray(v)
                       for k, v in self._fetch(self.state.cache).items()}
+        kv_keys = (set(zoo.paged_kv_keys(self.cfg))
+                   if self._alloc is not None else set())
         snaps = []
         deactivate = self.sample.active
         for slot in occupied:
+            cols = {}
+            for k, v in cache_host.items():
+                ax = self._cache_axes[k]
+                if k in kv_keys:
+                    # gather the slot's blocks into the canonical
+                    # contiguous column (block-size-agnostic snapshot)
+                    blocks = list(self._alloc.owned(slot))
+                    rows = v.take(blocks, axis=ax)
+                    sh = rows.shape
+                    merged = rows.reshape(
+                        sh[:ax] + (sh[ax] * sh[ax + 1],) + sh[ax + 2:])
+                    pad = self.max_seq - merged.shape[ax]
+                    if pad:
+                        widths = [(0, 0)] * merged.ndim
+                        widths[ax] = (0, pad)
+                        merged = np.pad(merged, widths)
+                    cols[k] = merged
+                else:
+                    cols[k] = v.take(slot, axis=ax)
             snaps.append((slot, SlotSnapshot(
                 request=self._slots[slot],
                 fed=int(self._fed[slot]),
                 next_tok=int(self._next_tok_host[slot]),
                 cache_len=int(self._fed[slot]),
-                cache={k: v.take(slot, axis=self._cache_axes[k])
-                       for k, v in cache_host.items()},
+                cache=cols,
             )))
             self._slots[slot] = None
+            if self._alloc is not None:
+                self._release_blocks(slot)
             deactivate = deactivate.at[slot].set(0)
         self.sample = self.sample._replace(active=deactivate)
         return snaps

@@ -24,7 +24,12 @@ another host (migration/drain), a paused unit is parked to free capacity
 Because the checkpoint is exact (cache columns + progress counters, see
 ``SlotSnapshot``), any interleaving of the four verbs round-trips to an
 identical greedy token stream — property-tested in
-``tests/test_workunit.py``.
+``tests/test_workunit.py``.  The snapshot's cache columns are always
+*canonical contiguous* (full ``max_seq`` sequence axes), independent of
+the source engine's cache mode: paged engines gather their blocks into
+that layout on ``pack`` and re-block on ``unpack``, so a unit moves
+freely between dense and paged engines — including paged engines with
+different block sizes.
 """
 
 from __future__ import annotations

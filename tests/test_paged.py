@@ -1,0 +1,334 @@
+"""Paged KV/SSM cache tests (PR-7 tentpole).
+
+* **Kernel** — the Pallas paged-attention kernel (interpret mode)
+  matches the gather-based reference; the reference itself is
+  *bit-identical* to the dense decode attention (masked positions
+  contribute exact zeros), which is the root of every stream-equality
+  claim below.  Sentinel (out-of-range) table entries are harmless.
+* **Engine equivalence** — a paged engine emits bit-identical token
+  streams to the dense engine across causal / ssm / hybrid families,
+  including prompts longer than the largest prefill bucket (multi-chunk
+  state-continued prefill) and pools smaller than ``lanes x max_seq``
+  (capacity-gated admission).
+* **Migration** — a mid-decode WorkUnit packs from a paged engine and
+  unpacks into a paged engine with a DIFFERENT block size (and into a
+  dense engine), resuming bit-identically: snapshots are canonical
+  contiguous, so block geometry is a per-engine detail.
+* **Block lifecycle** — hypothesis properties: any allocate/release
+  interleaving on the ``BlockAllocator`` and any admit/step/preempt/
+  resume/pack interleaving on a live engine never leaks or double-frees
+  a block (the allocator partition invariant holds at every step).
+* **Zero-sync** — steady-state paged decode performs no device->host
+  fetches, same as dense.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterMetrics
+from repro.configs import get_config
+from repro.kernels.paged_attention import (gather_pages, paged_attention,
+                                           paged_attention_ref)
+from repro.kernels.paged_attention.kernel import paged_attention as \
+    paged_kernel
+from repro.models import model_zoo as zoo
+from repro.models.layers import full_attention
+from repro.serving.engine import BlockAllocator, Request, ServingEngine
+
+from tests._hypothesis_compat import given, settings, st
+
+ARCHS = ["granite-8b", "mamba2-780m", "zamba2-2.7b"]
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        out[arch] = (cfg,
+                     zoo.init_state(cfg, jax.random.PRNGKey(0)).params)
+    return out
+
+
+def _requests(n, seed=0, plen=(3, 24), max_new=(4, 10), vocab=250):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(
+                        1, vocab, rng.integers(*plen)).astype(np.int32),
+                    max_new_tokens=int(rng.integers(*max_new)))
+            for i in range(n)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_idle()
+    assert all(r.done for r in reqs)
+    return {r.rid: list(r.out_tokens) for r in reqs}
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", 96)
+    kw.setdefault("prefill_buckets", (16, 64))
+    return ServingEngine(cfg, params, **kw)
+
+
+# ------------------------------------------------------------- kernel
+@pytest.mark.parametrize("heads,kv_heads,blocks_used", [(4, 4, 3),
+                                                        (8, 2, 4)])
+def test_paged_kernel_matches_ref(heads, kv_heads, blocks_used):
+    b, d, bs, nb, mb = 3, 16, 8, 12, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, heads, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (nb, bs, kv_heads, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (nb, bs, kv_heads, d), jnp.float32)
+    rng = np.random.default_rng(3)
+    bt = np.full((b, mb), nb, np.int32)
+    kv_len = np.zeros(b, np.int32)
+    for i in range(b):
+        used = rng.permutation(nb)[:blocks_used]
+        bt[i, :blocks_used] = used
+        kv_len[i] = rng.integers(1, blocks_used * bs + 1)
+    bt, kv_len = jnp.asarray(bt), jnp.asarray(kv_len)
+    ref = paged_attention_ref(q, k_pool, v_pool, bt, kv_len)
+    out = paged_kernel(q, k_pool, v_pool, jnp.clip(bt, 0, nb - 1), kv_len,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_ref_bit_identical_to_dense_attention():
+    """Gather-through-the-table + full_attention == dense decode
+    attention, bit for bit — including with sentinel table entries and
+    garbage in unreferenced pool blocks."""
+    b, h, d, bs, nb, mb = 2, 4, 16, 8, 10, 3
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (b, 1, h, d), jnp.float32)
+    dense_k = jax.random.normal(ks[1], (b, mb * bs, h, d), jnp.float32)
+    dense_v = jax.random.normal(ks[2], (b, mb * bs, h, d), jnp.float32)
+    kv_len = jnp.asarray([5, 17], jnp.int32)
+    # scatter the dense rows into arbitrary pool blocks + garbage rest
+    pool_k = jax.random.normal(ks[3], (nb, bs, h, d), jnp.float32) * 50
+    pool_v = pool_k + 1.0
+    bt = np.full((b, mb), nb, np.int32)     # sentinel everywhere...
+    rng = np.random.default_rng(0)
+    rows = rng.permutation(nb)[:b * mb].reshape(b, mb)
+    for i in range(b):
+        n_needed = -(-int(kv_len[i]) // bs)
+        bt[i, :n_needed] = rows[i, :n_needed]   # ...except live blocks
+        for j in range(n_needed):
+            blk = rows[i, j]
+            pool_k = pool_k.at[blk].set(dense_k[i, j * bs:(j + 1) * bs])
+            pool_v = pool_v.at[blk].set(dense_v[i, j * bs:(j + 1) * bs])
+    ref = full_attention(q, dense_k, dense_v, causal=False,
+                         kv_len=kv_len)[:, 0]
+    out = paged_attention_ref(q[:, 0], pool_k, pool_v, jnp.asarray(bt),
+                              kv_len)
+    assert bool(jnp.all(out == ref))
+    # and the jit'd dispatch entry point agrees with itself on ref impl
+    out2 = paged_attention(q[:, 0], pool_k, pool_v, jnp.asarray(bt),
+                           kv_len, impl="ref")
+    assert bool(jnp.all(out2 == ref))
+
+
+def test_gather_pages_clamps_sentinels():
+    pool = jnp.arange(4 * 2 * 1 * 2, dtype=jnp.float32).reshape(4, 2, 1, 2)
+    bt = jnp.asarray([[1, 4, 4]], jnp.int32)     # 4 == sentinel (nb)
+    rows = gather_pages(pool, bt)
+    assert rows.shape == (1, 6, 1, 2)
+    assert bool(jnp.all(rows[0, :2] == pool[1]))  # real block intact
+
+
+# ----------------------------------------------------- engine equivalence
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_engine_bit_identical(models, arch):
+    cfg, params = models[arch]
+    dense = _run(_engine(cfg, params), _requests(8, seed=2))
+    paged = _run(_engine(cfg, params, cache_mode="paged", block_size=8),
+                 _requests(8, seed=2))
+    assert dense == paged
+
+
+def test_multichunk_long_prompt_bit_identical(models):
+    """Prompts beyond the largest bucket: the paged engine appends
+    multiple state-continued chunks (no streamed tail for pad-safe
+    families) and still matches dense exactly."""
+    cfg, params = models["granite-8b"]
+    reqs = _requests(3, seed=7, plen=(70, 93), max_new=(3, 6))
+    dense = _run(_engine(cfg, params),
+                 [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                  for r in reqs])
+    eng = _engine(cfg, params, cache_mode="paged", block_size=8)
+    paged = _run(eng, reqs)
+    assert dense == paged
+    assert eng.chunk_prefills > len(reqs)    # > one chunk per request
+
+
+def test_small_pool_capacity_gated(models):
+    """A pool far smaller than lanes x max_seq still completes every
+    request bit-identically — admission queues on free blocks instead
+    of overcommitting."""
+    cfg, params = models["granite-8b"]
+    dense = _run(_engine(cfg, params),
+                 _requests(6, seed=9, plen=(3, 12), max_new=(3, 6)))
+    eng = _engine(cfg, params, cache_mode="paged", block_size=8,
+                  kv_pool_blocks=6)
+    paged = _run(eng, _requests(6, seed=9, plen=(3, 12), max_new=(3, 6)))
+    assert dense == paged
+    assert eng.occupancy()["peak_blocks_in_use"] <= 6
+
+
+# ------------------------------------------------------------ migration
+@pytest.mark.parametrize("arch", ["granite-8b", "mamba2-780m"])
+def test_cross_block_size_migration(models, arch):
+    """Mid-decode pack from block_size=4, unpack into block_size=16:
+    resumed streams match the uninterrupted dense reference exactly."""
+    cfg, params = models[arch]
+    reqs = _requests(3, seed=3, plen=(5, 30), max_new=(6, 12))
+    ref = _run(_engine(cfg, params),
+               [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                for r in reqs])
+    src = _engine(cfg, params, cache_mode="paged", block_size=4)
+    for r in reqs:
+        src.submit(r)
+    src.step_many(3)
+    units = src.pack()
+    assert units and src.n_active == 0
+    src._alloc.check_invariants()
+    assert src._alloc.free_count == src.pool_blocks   # all returned
+    dst = _engine(cfg, params, cache_mode="paged", block_size=16)
+    dst.unpack(units)
+    dst.run_until_idle()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+
+
+def test_paged_to_dense_migration(models):
+    cfg, params = models["granite-8b"]
+    reqs = _requests(3, seed=5, plen=(6, 20), max_new=(5, 9))
+    ref = _run(_engine(cfg, params),
+               [Request(r.rid, r.prompt.copy(), r.max_new_tokens)
+                for r in reqs])
+    src = _engine(cfg, params, cache_mode="paged", block_size=8)
+    for r in reqs:
+        src.submit(r)
+    src.step_many(4)
+    units = src.pack()
+    dst = _engine(cfg, params)                        # dense target
+    dst.unpack(units)
+    dst.run_until_idle()
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref
+
+
+# -------------------------------------------------------- block lifecycle
+@given(ops=st.lists(st.tuples(st.integers(0, 1), st.integers(0, 7),
+                              st.integers(1, 6)), max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_block_allocator_never_leaks(ops):
+    """Any allocate/release interleaving keeps free + owned an exact
+    partition of the pool; misuse raises instead of corrupting."""
+    alloc = BlockAllocator(16)
+    for kind, slot, n in ops:
+        if kind == 0:
+            if slot in alloc._owned or not alloc.can_allocate(n):
+                with pytest.raises(ValueError):
+                    alloc.allocate(slot, n)
+            else:
+                blocks = alloc.allocate(slot, n)
+                assert len(blocks) == len(set(blocks)) == n
+        else:
+            if slot in alloc._owned:
+                alloc.release(slot)
+            else:
+                with pytest.raises(ValueError):
+                    alloc.release(slot)
+        alloc.check_invariants()
+    assert alloc.peak_in_use <= alloc.num_blocks
+
+
+@given(script=st.lists(st.integers(0, 4), min_size=1, max_size=12))
+@settings(max_examples=6, deadline=None)
+def test_engine_interleaving_never_leaks_blocks(models, script):
+    """Random admit/step/preempt/resume/pack interleavings on a live
+    paged engine: the allocator partition invariant holds after every
+    op, and a drained engine has every block back in the pool."""
+    cfg, params = models["granite-8b"]
+    eng = _engine(cfg, params, cache_mode="paged", block_size=8,
+                  kv_pool_blocks=18)
+    rng = np.random.default_rng(0)
+    rid = [0]
+    parked = []
+
+    def submit():
+        eng.submit(Request(rid=rid[0],
+                           prompt=rng.integers(1, 250, int(
+                               rng.integers(3, 14))).astype(np.int32),
+                           max_new_tokens=int(rng.integers(3, 7))))
+        rid[0] += 1
+
+    for op in script:
+        if op == 0:
+            submit()
+        elif op == 1:
+            eng.step_many(2)
+        elif op == 2:
+            occupied = [s for s, r in enumerate(eng._slots)
+                        if r is not None]
+            if occupied:
+                parked.extend(eng.preempt(occupied[:1]))
+        elif op == 3 and parked:
+            eng.resume([parked.pop(0)])
+        elif op == 4:
+            eng.unpack(eng.pack())
+        eng._alloc.check_invariants()
+        assert eng._alloc.in_use <= eng.pool_blocks
+    eng.resume(parked)
+    eng.run_until_idle()
+    eng._alloc.check_invariants()
+    assert eng._alloc.free_count == eng.pool_blocks
+
+
+# ------------------------------------------------------------- zero-sync
+def test_paged_steady_state_is_sync_free(models):
+    cfg, params = models["granite-8b"]
+    eng = ServingEngine(cfg, params, cache_mode="paged", block_size=8,
+                        batch_size=2, max_seq=96, prefill_buckets=(16,))
+    for r in _requests(2, seed=1, plen=(4, 8), max_new=(40, 41)):
+        eng.submit(r)
+    eng.step_many(4)                       # admission window
+    syncs0 = eng.host_syncs
+    for _ in range(5):
+        eng.step_many(4)                   # nobody completes here
+    assert eng.host_syncs == syncs0
+    eng.run_until_idle()
+
+
+# ----------------------------------------------------- occupancy metrics
+def test_occupancy_threads_into_cluster_summary(models):
+    cfg, params = models["granite-8b"]
+    eng = _engine(cfg, params, cache_mode="paged", block_size=8)
+    _run(eng, _requests(5, seed=4))
+    occ = eng.occupancy()
+    assert occ["max_concurrent_slots"] >= 1
+    assert 0 < occ["peak_blocks_in_use"] <= occ["pool_blocks"]
+    assert occ["active_slots"] == occ["blocks_in_use"] == 0   # drained
+
+    metrics = ClusterMetrics()
+    metrics.on_launch(0, "t.small")
+    metrics.on_occupancy(0, occ)
+    metrics.on_occupancy(99, occ)          # unknown replica: ignored
+    summary = metrics.summary(now=1.0)
+    assert summary["max_concurrent_slots"] == occ["max_concurrent_slots"]
+    assert summary["peak_block_occupancy"] == pytest.approx(
+        occ["peak_blocks_in_use"] / occ["pool_blocks"])
+
+
+def test_dense_engine_occupancy_is_slot_only(models):
+    cfg, params = models["granite-8b"]
+    eng = _engine(cfg, params)
+    _run(eng, _requests(4, seed=6))
+    occ = eng.occupancy()
+    assert occ["max_concurrent_slots"] >= 1
+    assert occ["pool_blocks"] == occ["peak_blocks_in_use"] == 0
