@@ -18,12 +18,18 @@ Guarded figures, dispatched on the dump's ``scenario`` field:
   ``churn_speedup``, floor ``--min-churn-speedup`` and always > 1x),
   with bit-identical streams, a concurrent-slot high-water above the
   dense lane count, and zero steady-state host syncs.
+* ``cluster_chaos`` — checkpoint-based recovery must lose ZERO requests
+  under the chaos soup with bit-identical final streams, at strictly
+  higher goodput than the recovery-off run (which must demonstrably
+  lose work), goodput at or above ``--min-chaos-goodput``, and
+  replayed-token overhead at or below ``--max-replay-frac``.
 
 Usage:
   python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
   python benchmarks/guard.py BENCH_cluster_slo.json --min-attainment 0.6
   python benchmarks/guard.py BENCH_cluster_spot_market.json --min-savings 40
   python benchmarks/guard.py BENCH_engine_churn.json --min-churn-speedup 1.0
+  python benchmarks/guard.py BENCH_cluster_chaos.json --min-chaos-goodput 1.0
   python benchmarks/guard.py BENCH_*.json          # guard all known dumps
 """
 
@@ -93,6 +99,18 @@ def churn_stats(bench: dict) -> tuple:
             int(_derived(bench, row, r"steady_syncs=([0-9]+)")))
 
 
+def chaos_stats(bench: dict) -> tuple:
+    """(goodput_on, goodput_off, lost_on, lost_off, bit_identical,
+    replay_frac) from a cluster_chaos dump's summary row."""
+    row = "cluster_chaos_summary"
+    return (_derived(bench, row, r"goodput=([0-9.]+)vs"),
+            _derived(bench, row, r"goodput=[0-9.]+vs([0-9.]+)tok/s"),
+            int(_derived(bench, row, r"lost=([0-9]+)vs")),
+            int(_derived(bench, row, r"lost=[0-9]+vs([0-9]+)")),
+            _derived_str(bench, row, r"bit_identical=(\w+)") == "True",
+            _derived(bench, row, r"replay_frac=([0-9.]+)"))
+
+
 def check(bench: dict, args) -> bool:
     scenario = bench.get("scenario", "")
     if scenario == "engine_throughput":
@@ -160,6 +178,42 @@ def check(bench: dict, args) -> bool:
               f"{floor:.2f}x, bit-identical, peak slots {peak} > "
               f"{lanes} dense lanes, 0 steady-state syncs")
         return True
+    if scenario == "cluster_chaos":
+        (gp_on, gp_off, lost_on, lost_off,
+         identical, replay) = chaos_stats(bench)
+        if lost_on != 0:
+            print(f"guard: FAIL — recovery lost {lost_on} request(s) "
+                  f"under the chaos soup (must be 0)", file=sys.stderr)
+            return False
+        if not identical:
+            print("guard: FAIL — recovered streams no longer bit-identical "
+                  "to the fault-free reference", file=sys.stderr)
+            return False
+        if lost_off <= 0:
+            print("guard: FAIL — the no-recovery run lost nothing: the "
+                  "chaos soup no longer bites and the A/B is vacuous",
+                  file=sys.stderr)
+            return False
+        if gp_on <= gp_off:
+            print(f"guard: FAIL — recovery goodput {gp_on:.3f} tok/s no "
+                  f"longer beats no-recovery {gp_off:.3f} tok/s",
+                  file=sys.stderr)
+            return False
+        if gp_on < args.min_chaos_goodput:
+            print(f"guard: FAIL — recovery goodput {gp_on:.3f} tok/s "
+                  f"regressed below {args.min_chaos_goodput:.3f}",
+                  file=sys.stderr)
+            return False
+        if replay > args.max_replay_frac:
+            print(f"guard: FAIL — replayed-token overhead {replay:.3f} "
+                  f"exceeds {args.max_replay_frac:.3f} of useful tokens",
+                  file=sys.stderr)
+            return False
+        print(f"guard: OK — chaos recovery lost 0 (vs {lost_off} without), "
+              f"bit-identical, goodput {gp_on:.3f} > {gp_off:.3f} tok/s "
+              f">= {args.min_chaos_goodput:.3f}, replay overhead "
+              f"{replay:.3f} <= {args.max_replay_frac:.3f}")
+        return True
     print(f"guard: skip — no guard registered for scenario {scenario!r}")
     return True
 
@@ -181,6 +235,13 @@ def main() -> None:
                     help="minimum paged-over-dense decode tokens/sec "
                          "under churn (engine_churn dumps; always "
                          "strictly > 1x)")
+    ap.add_argument("--min-chaos-goodput", type=float, default=1.0,
+                    help="minimum recovery-on goodput in tok/s under the "
+                         "chaos soup (cluster_chaos dumps; must also "
+                         "strictly beat the recovery-off run)")
+    ap.add_argument("--max-replay-frac", type=float, default=0.25,
+                    help="maximum replayed-token overhead as a fraction "
+                         "of useful tokens (cluster_chaos dumps)")
     args = ap.parse_args()
     ok = True
     for path in args.bench_json:

@@ -18,6 +18,10 @@ Sections (run all, or pick with positional names / ``--scenario``):
   cluster_preempt     SLO-aware preemption A/B: pause batch slots for an
                       interactive surge vs buying replicas (attainment at
                       equal-or-lower fleet dollar cost, identical tokens)
+  cluster_chaos       chaos-soup A/B: hard kill + slowdown + contention +
+                      endpoint failure survived via checkpoints, heartbeat
+                      failure detection and straggler quarantine vs the
+                      same soup with recovery off (demonstrably lost work)
   engine_throughput   ServingEngine A/B: chunked bulk prefill + sync-free
                       batched decode vs the streamed per-token baseline
   engine_churn        paged-cache A/B: continuous batching on a block pool
@@ -590,6 +594,119 @@ def cluster_spot_market(quick: bool = False):
         f"{att_a:.3f} vs {att_n:.3f}")
 
 
+def cluster_chaos(quick: bool = False):
+    """Chaos fault model + checkpoint-based recovery A/B.
+
+    One fixed chaos soup hits a 2-replica fleet mid-stream: a zero-notice
+    ``hard_kill`` on the busiest replica, a 3x ``slowdown`` window on the
+    survivor, a fabric-wide ``network_contention`` window, and a
+    transient ``endpoint_failure``.  Three runs over the identical seeded
+    request set:
+
+    * fault_free    — the reference streams (per-request tokens);
+    * recovery_on   — periodic WorkUnit checkpoints + heartbeat failure
+                      detection + straggler quarantine: the kill is
+                      discovered by silence, checkpointed slots restore
+                      and re-decode their lost tail deterministically,
+                      un-checkpointed requests readmit from the prompt;
+    * recovery_off  — same soup, no checkpoints/detector: the killed
+                      replica's work is demonstrably lost.
+
+    Recovery must complete every request with final streams bit-identical
+    to the fault-free reference (greedy decode is placement-independent)
+    at strictly higher goodput than the no-recovery run, with bounded
+    replayed-token overhead.
+    """
+    import jax
+    from repro.cluster import (CheckpointPolicy, FailureDetector,
+                               InstanceType, ServingCluster,
+                               StragglerPolicy)
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.runtime import FaultTrace
+    from repro.serving.workload import synthetic_requests
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    n_requests = 12 if quick else 20
+    fleet = [InstanceType("std.1x", 1.0, cost_per_hour=1.0)
+             for _ in range(2)]
+
+    def chaos_trace():
+        trace = FaultTrace()
+        # mid-step-cadence kill: tokens decoded since the last
+        # checkpoint are genuinely lost and must re-decode
+        trace.inject_hard_kill(9.5, 0)
+        trace.inject_slowdown(4.0, 1, factor=3.0, duration=10.0)
+        trace.inject_contention(5.0, factor=2.0, duration=8.0)
+        trace.inject_endpoint_failure(2.0, 0, count=1)
+        return trace
+
+    def one_run(mode):
+        kw = {}
+        if mode == "recovery_on":
+            # an interval that does NOT divide the kill time, so the
+            # last checkpoint predates the kill and a real lost tail
+            # gets re-decoded (the replayed-token overhead the guard
+            # bounds)
+            kw = dict(checkpoint=CheckpointPolicy(interval=3.0),
+                      health=FailureDetector(heartbeat_interval=1.0,
+                                             check_interval=1.0,
+                                             suspect_after=2.5,
+                                             confirm_after=5.0),
+                      straggler=StragglerPolicy())
+        trace = FaultTrace() if mode == "fault_free" else chaos_trace()
+        cl = ServingCluster(cfg, params, fleet, trace=trace, dt=1.0,
+                            batch_size=2, max_seq=32, **kw)
+        reqs = synthetic_requests(n_requests, cfg.vocab_size, seed=0,
+                                  prompt_len=(3, 8))
+        for i, r in enumerate(reqs):
+            cl.submit(r, at=0.3 * i)
+        out = cl.run(max_time=10_000)
+        useful = sum(len(r.out_tokens) for r in reqs if r.done)
+        goodput = useful / max(out["virtual_seconds"], 1e-9)
+        return reqs, out, goodput
+
+    results = {}
+    for mode in ("fault_free", "recovery_on", "recovery_off"):
+        reqs, out, goodput = one_run(mode)
+        results[mode] = (reqs, out, goodput)
+        row(f"cluster_chaos_{mode}", 0.0,
+            f"completed={out['completed']}/{n_requests};"
+            f"lost={out['requests_lost']};goodput={goodput:.3f}tok/s;"
+            f"hard_kills={out['hard_kills']};"
+            f"checkpoints={out['checkpoints']};"
+            f"recovered={out['requests_recovered']};"
+            f"replayed={out['replayed_tokens']}")
+
+    ref_reqs, _, _ = results["fault_free"]
+    on_reqs, on, goodput_on = results["recovery_on"]
+    off_reqs, off, goodput_off = results["recovery_off"]
+
+    identical = all(a.out_tokens == b.out_tokens
+                    for a, b in zip(ref_reqs, on_reqs))
+    useful_on = sum(len(r.out_tokens) for r in on_reqs if r.done)
+    replay_frac = on["replayed_tokens"] / max(useful_on, 1)
+    row("cluster_chaos_summary", 0.0,
+        f"goodput={goodput_on:.3f}vs{goodput_off:.3f}tok/s;"
+        f"lost={on['requests_lost']}vs{off['requests_lost']};"
+        f"bit_identical={identical};"
+        f"recovered={on['requests_recovered']};"
+        f"replay_frac={replay_frac:.3f};"
+        f"hard_kills={on['hard_kills']};"
+        f"recovery_latency={on['recovery_latency_s']:.1f}s")
+    assert on["hard_kills"] >= 1, "the chaos soup never killed anyone"
+    assert on["dropped"] == 0 and on["requests_lost"] == 0, \
+        "recovery lost requests despite checkpoints + detection"
+    assert on["completed"] == n_requests, "recovery run incomplete"
+    assert identical, "recovered streams diverged from fault-free"
+    assert off["requests_lost"] > 0, \
+        "the no-recovery run lost nothing (the kill never bit)"
+    assert goodput_on > goodput_off, (
+        f"recovery goodput {goodput_on:.3f} tok/s did not beat "
+        f"no-recovery {goodput_off:.3f} tok/s")
+
+
 # ------------------------------------------------------------------ engine
 def engine_throughput(quick: bool = False):
     """ServingEngine hot-path A/B: chunked bulk prefill + sync-free
@@ -826,8 +943,8 @@ def roofline():
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
             cluster_hetero, cluster_slo, cluster_preempt,
-            cluster_spot_market, engine_throughput, engine_churn,
-            roofline]
+            cluster_spot_market, cluster_chaos, engine_throughput,
+            engine_churn, roofline]
 
 
 def main() -> None:

@@ -4,11 +4,15 @@ Replicated ``ServingEngine``s behind a pluggable ``ControlPlane``:
 in-flight requests are migratable ``WorkUnit``s (one pack/unpack
 lifecycle), and placement, SLO-aware preemption and cost-aware elastic
 scaling are swappable policies over a read-only ``ClusterView``.
+Chaos faults (hard kills, stragglers, contention, endpoint failures)
+are survived through periodic ``CheckpointPolicy`` snapshots, a
+heartbeat ``FailureDetector``, and ``StragglerPolicy`` quarantine.
 """
 
 from repro.serving.workunit import WorkUnit
 
 from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.checkpoint import CheckpointPolicy, CheckpointRecord
 from repro.cluster.cluster import ServingCluster
 from repro.cluster.control import (BacklogScaling, ClusterView,
                                    ControlPlane, CostAwareScaling,
@@ -17,9 +21,11 @@ from repro.cluster.control import (BacklogScaling, ClusterView,
                                    PREEMPTION_POLICIES, ResumeOrder,
                                    ScaleDecision, ScalingPolicy,
                                    SCALING_POLICIES, SLOPreemption)
-from repro.cluster.endpoint import (DeviceEndpoint, ENDPOINTS,
-                                    HostEndpoint, MigrationEndpoint,
-                                    make_endpoint)
+from repro.cluster.endpoint import (DeviceEndpoint, EndpointUnavailable,
+                                    ENDPOINTS, HostEndpoint,
+                                    MigrationEndpoint, make_endpoint)
+from repro.cluster.health import (FailureDetector, QuarantineOrder,
+                                  ReleaseOrder, StragglerPolicy)
 from repro.cluster.metrics import ClusterMetrics, VirtualClock
 from repro.cluster.replica import InstanceType, Replica, ReplicaState
 from repro.cluster.router import (DeadlineAwareRouter, RateAwareRouter,

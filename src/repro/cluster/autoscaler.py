@@ -62,8 +62,9 @@ class Autoscaler:
     # ------------------------------------------------------------- events
     def handle_spot(self, ev: SpotNotice, now: float):
         rep = self.cluster.replica_by_rid(ev.target)
-        if rep is None or rep.state == ReplicaState.TERMINATED:
-            return
+        if rep is None or rep.state in (ReplicaState.TERMINATED,
+                                        ReplicaState.DEAD):
+            return   # gone (or silently dead: a notice can't revive it)
         if ev.kind == "rebalance_recommendation":
             if rep.serving:
                 rep.state = ReplicaState.AT_RISK

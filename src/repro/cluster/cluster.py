@@ -52,14 +52,18 @@ from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
 from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
 from repro.core.rates import RateMonitor
-from repro.runtime import EventLoop, FaultTrace, VirtualClock
+from repro.runtime import CHAOS_KINDS, EventLoop, FaultTrace, VirtualClock
 from repro.serving.engine import Request
 from repro.serving.workload import STANDARD, SLOClass
 from repro.serving.workunit import WorkUnit
 
 from repro.cluster.autoscaler import Autoscaler
+from repro.cluster.checkpoint import CheckpointPolicy
 from repro.cluster.control import (ClusterView, ControlPlane,
                                    PreemptionPolicy, ScalingPolicy)
+from repro.cluster.endpoint import EndpointUnavailable
+from repro.cluster.health import (FailureDetector, QuarantineOrder,
+                                  StragglerPolicy)
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.replica import InstanceType, Replica, ReplicaState
 from repro.cluster.router import RateAwareRouter, Router
@@ -89,7 +93,11 @@ class ServingCluster:
                  rebalance_ratio: float = 1.75,
                  preemption: Optional[PreemptionPolicy] = None,
                  scaling: Optional[ScalingPolicy] = None,
-                 market=None, fallback=None):
+                 market=None, fallback=None,
+                 checkpoint: Optional[CheckpointPolicy] = None,
+                 health: Optional[FailureDetector] = None,
+                 straggler: Optional[StragglerPolicy] = None,
+                 contention_stage_s: float = 1.0):
         if admission not in ("fifo", "priority"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -135,6 +143,13 @@ class ServingCluster:
             self.metrics.attach_ledger(market.ledger)
         else:
             self.fallback = None
+        # chaos & recovery: periodic WorkUnit checkpoints, heartbeat
+        # failure detection, straggler quarantine, and a cluster-wide
+        # network-contention window inflating staging/heartbeat latency
+        self.checkpoint = checkpoint
+        self.health = health
+        self.contention_stage_s = contention_stage_s
+        self._contention: Tuple[float, float] = (1.0, 0.0)  # factor, until
         self.timeline: List[Tuple[float, str]] = []
         self._rid = itertools.count()
         self.loop.register("arrival", self._on_arrival)
@@ -144,6 +159,11 @@ class ServingCluster:
         self.loop.register("control", self._on_control)
         self.loop.register("dispatch", self._on_dispatch)
         self.loop.register("rebalance", self._on_rebalance)
+        self.loop.register("checkpoint", self._on_checkpoint)
+        self.loop.register("heartbeat", self._on_heartbeat)
+        self.loop.register("health_check", self._on_health_check)
+        self.loop.register("chaos_end", self._on_chaos_end)
+        self.loop.register("unit_land", self._on_unit_land)
         self.faults.bind(self.loop, kind="spot")
         self.replicas: List[Replica] = []
         for itype in fleet:
@@ -161,10 +181,13 @@ class ServingCluster:
             preemption=(preemption if preemption is not None else
                         PreemptionPolicy(batch_admit_headroom)),
             scaling=self.autoscaler.policy,
-            fallback=self.fallback)
+            fallback=self.fallback,
+            straggler=straggler)
         self._control_ev = None
         self._dispatch_ev = None
         self._rebalance_ev = None
+        self._checkpoint_ev = None
+        self._health_ev = None
         self._parked: List[WorkUnit] = []
         self._paused: List[WorkUnit] = []  # preempted, awaiting resume
         self._held: List[Request] = []   # lazily-admitted (batch) arrivals
@@ -265,6 +288,17 @@ class ServingCluster:
             tgt = min(survivors, key=key)
             if need_free:
                 free[tgt.rid] -= 1
+            # a contention window inflates the staging leg: the unit is
+            # in transit for the extra latency and lands via an event
+            # (by then the target may have died — unit_land re-places)
+            delay = (self.net_factor(now) - 1.0) * self.contention_stage_s
+            if delay > 0.0:
+                self.loop.schedule(now + delay, "unit_land",
+                                   rid=tgt.rid, unit=u)
+                self.metrics.contention_delay_s += delay
+                self.log(now, f"readmit req{u.rid} -> r{tgt.rid} "
+                              f"(+{delay:.3g}s contention)")
+                continue
             tgt.unpack([u])
             u.record_hop(tgt.rid, now, "land")
             self._kick(tgt, now)
@@ -343,7 +377,77 @@ class ServingCluster:
         self._dispatch(t)
 
     def _on_spot(self, ev, t: float):
-        self.autoscaler.handle_spot(ev.payload["notice"], t)
+        notice = ev.payload["notice"]
+        if notice.kind in CHAOS_KINDS:
+            self._on_chaos(notice, t)
+        else:
+            self.autoscaler.handle_spot(notice, t)
+        self._dispatch(t)
+
+    # --------------------------------------------------------------- chaos
+    def net_factor(self, now: float) -> float:
+        """Current network-contention multiplier on staging latency and
+        heartbeat delivery (1.0 outside a contention window)."""
+        factor, until = self._contention
+        return factor if now < until else 1.0
+
+    def _on_chaos(self, notice, t: float):
+        rep = self.replica_by_rid(notice.target) \
+            if notice.target >= 0 else None
+        if notice.kind == "hard_kill":
+            if rep is None or not rep.serving:
+                return
+            if rep.step_event is not None:
+                self.loop.cancel(rep.step_event)
+                rep.step_event = None
+            manifest = rep.hard_kill(t)
+            # requests that had finished BEFORE the kill (surfaced by the
+            # manifest's flush) were delivered — they complete, not lose
+            self._harvest(rep, t)
+            n_lost = sum(len(v) for v in manifest.values())
+            self.metrics.on_hard_kill(rep.rid, n_lost)
+            self.metrics.on_terminate(rep.rid, t)  # provider stops billing
+            self.log(t, f"hard_kill r{rep.rid}: {n_lost} request(s) "
+                        f"in flight, zero notice")
+            # deliberately NO drain and NO readmission here: nothing
+            # announced this kill, so only heartbeat silence (the
+            # FailureDetector) can discover and recover the lost work
+        elif notice.kind == "slowdown":
+            if rep is None or not rep.serving:
+                return
+            rep.apply_slowdown(notice.factor, t + notice.duration)
+            self.metrics.slowdowns += 1
+            self.loop.schedule(t + notice.duration, "chaos_end",
+                               rid=rep.rid, what="slowdown")
+            self.log(t, f"slowdown r{rep.rid} x{notice.factor:g} "
+                        f"for {notice.duration:g}s")
+        elif notice.kind == "network_contention":
+            factor = max(notice.factor, 1.0)
+            until = t + notice.duration
+            cur_f, cur_until = self._contention
+            if t < cur_until:       # overlapping windows: worst of both
+                factor, until = max(factor, cur_f), max(until, cur_until)
+            self._contention = (factor, until)
+            self.metrics.contention_windows += 1
+            self.loop.schedule(until, "chaos_end", rid=-1,
+                               what="network_contention")
+            self.log(t, f"network_contention x{notice.factor:g} "
+                        f"for {notice.duration:g}s")
+        elif notice.kind == "endpoint_failure":
+            if rep is None:
+                return
+            rep.endpoint.arm_failures(notice.count)
+            self.metrics.endpoint_faults += 1
+            self.log(t, f"endpoint_failure r{rep.rid}: next "
+                        f"{notice.count} staging op(s) fail")
+
+    def _on_chaos_end(self, ev, t: float):
+        if ev.payload["what"] == "slowdown":
+            rep = self.replica_by_rid(ev.payload["rid"])
+            if rep is not None:
+                rep.clear_slowdown(t)
+                self.log(t, f"slowdown r{rep.rid} ended")
+        # contention clears itself through net_factor's until-timestamp
         self._dispatch(t)
 
     def _on_replica_ready(self, ev, t: float):
@@ -388,11 +492,165 @@ class ServingCluster:
     def _on_control(self, ev, t: float):
         self._control_ev = None
         self.autoscaler.tick(t)
+        self._straggler_pass(t)
         self._dispatch(t)
 
     def _on_rebalance(self, ev, t: float):
         self._rebalance_ev = None
         self._rebalance_pass(t)
+        self._dispatch(t)
+
+    # --------------------------------------------------- checkpoint events
+    def _on_checkpoint(self, ev, t: float):
+        """Periodic recovery checkpoint: every serving replica with live
+        slots non-destructively packs them into its endpoint store.
+        Pure observation — no dispatch pass, nothing moves."""
+        self._checkpoint_ev = None
+        for rep in self.replicas:
+            if not (rep.serving and rep.engine.n_active):
+                continue
+            try:
+                n, ckpt_s = self.checkpoint.take(rep, t)
+            except EndpointUnavailable:
+                self.log(t, f"checkpoint r{rep.rid} failed past retry "
+                            f"budget; next pass retries")
+                continue
+            if n:
+                self.metrics.on_checkpoint(rep.rid, n, ckpt_s)
+            # the checkpoint's poll can surface just-finished slots
+            self._harvest(rep, t)
+        self._ensure_checkpoint(t)
+
+    # ------------------------------------------------------ health events
+    def _on_heartbeat(self, ev, t: float):
+        rep = self.replica_by_rid(ev.payload["rid"])
+        if rep is None or self.health is None:
+            return
+        rep.beat_event = None
+        if rep.state is ReplicaState.TERMINATED:
+            self.health.forget(rep.rid)     # retired gracefully
+            return
+        if rep.state is ReplicaState.DEAD:
+            return   # silence — exactly the signal the detector needs
+        self.health.beat(rep.rid, t)
+        if self._pending_work():
+            # contention inflates delivery: the next beat lands late,
+            # which is what pushes a tight suspect_after into false
+            # suspicions (cleared when the late beat arrives)
+            rep.beat_event = self.loop.schedule(
+                t + self.health.heartbeat_interval * self.net_factor(t),
+                "heartbeat", rid=rep.rid)
+
+    def _on_health_check(self, ev, t: float):
+        self._health_ev = None
+        if self.health is None:
+            return
+        suspects, cleared, confirmed = self.health.scan(self.replicas, t)
+        for rid in suspects:
+            self.log(t, f"suspect r{rid} (heartbeat silent)")
+        for rid in cleared:
+            self.log(t, f"clear r{rid} (heartbeat resumed)")
+        for rep in confirmed:
+            self._recover(rep, t)
+        if self._pending_work():
+            self._health_ev = self.loop.schedule(
+                t + self.health.check_interval, "health_check")
+        self._dispatch(t)
+
+    def _recover(self, rep: Replica, t: float):
+        """Confirmed-dead recovery: restore the last checkpoint's units
+        (original request objects rewound to checkpoint progress — the
+        lost tail re-decodes deterministically, so final streams stay
+        bit-identical), readmit everything un-checkpointed from the
+        prompt, and strike the replica from the books."""
+        manifest, rep.lost = rep.lost, None
+        rep.state = ReplicaState.TERMINATED
+        self.health.forget(rep.rid)
+        if manifest is None:
+            # a false confirm (e.g. extreme contention): the replica
+            # was never killed — treat as an operator-forced retirement
+            self.log(t, f"confirm r{rep.rid} dead but replica alive; "
+                        f"retiring it")
+            self.metrics.on_terminate(rep.rid, t)
+            return
+        lost = {r.rid: r for r in manifest["active"]}
+        lost.update({r.rid: r for r in manifest["pending"]})
+        recovered_units: List[WorkUnit] = []
+        restore_s, replayed = 0.0, 0
+        if self.checkpoint is not None:
+            units, restore_s = self.checkpoint.recover(rep)
+            for u in units:
+                orig = lost.pop(u.request.rid, None)
+                if orig is None:
+                    continue   # completed or migrated after checkpoint
+                ckpt_out = list(u.snapshot.request.out_tokens)
+                replayed += max(0, len(orig.out_tokens) - len(ckpt_out))
+                orig.out_tokens[:] = ckpt_out    # rewind to checkpoint
+                orig.done = False
+                u.snapshot.request = orig  # stream continues into the
+                recovered_units.append(u)  # caller's own object
+        # un-checkpointed in-flight work replays from the prompt; the
+        # untouched queue just re-routes
+        resubmit: List[Request] = []
+        for orig in lost.values():
+            replayed += len(orig.out_tokens)
+            orig.out_tokens[:] = []
+            orig.done = False
+            resubmit.append(orig)
+        resubmit.extend(manifest["queued"])
+        self.metrics.on_recovery(
+            rep.rid, recovered=len(recovered_units) + len(resubmit),
+            replayed=replayed, latency=t - (rep.killed_t or t),
+            restore_s=restore_s)
+        self.log(t, f"recover r{rep.rid}: {len(recovered_units)} unit(s) "
+                    f"from checkpoint, {len(resubmit)} from prompt, "
+                    f"{replayed} token(s) replayed")
+        if recovered_units:
+            self.readmit(recovered_units, t)
+        for req in resubmit:
+            self.router.submit(req)
+
+    # ------------------------------------------------ straggler mitigation
+    def _straggler_pass(self, now: float):
+        """Execute the straggler policy's quarantine/release orders:
+        quarantined replicas stop admitting (they finish what they
+        hold), and their urgent slots migrate to healthy peers."""
+        pol = self.control.straggler
+        if pol is None:
+            return
+        for order in pol.orders(self.view, now):
+            rep = self.replica_by_rid(order.rid)
+            if rep is None or not rep.serving:
+                continue
+            if isinstance(order, QuarantineOrder):
+                rep.quarantined = True
+                rep.quarantined_t = now
+                self.metrics.quarantines += 1
+                self.log(now, f"quarantine r{rep.rid} (straggler)")
+                if order.slots:
+                    units, _times = rep.pack_slots(list(order.slots))
+                    self._harvest(rep, now)
+                    for u in units:
+                        u.packed_t = now
+                        u.record_hop(rep.rid, now, "straggler")
+                        self.metrics.on_migration(u.rid)
+                    self.metrics.rebalance_migrations += len(units)
+                    self.readmit(units, now)
+            else:
+                rep.quarantined = False
+                self.log(now, f"release r{rep.rid} (rate recovered)")
+
+    def _on_unit_land(self, ev, t: float):
+        """Contention-delayed unit landing (the in-transit leg of a
+        migration under an inflated-staging-latency window)."""
+        unit: WorkUnit = ev.payload["unit"]
+        rep = self.replica_by_rid(ev.payload["rid"])
+        if rep is None or not rep.serving:
+            self.readmit([unit], t)   # target vanished in transit
+            return
+        rep.unpack([unit])
+        unit.record_hop(rep.rid, t, "land")
+        self._kick(rep, t)
         self._dispatch(t)
 
     # ------------------------------------------------------------- driving
@@ -427,10 +685,52 @@ class ServingCluster:
         self._preemption_pass(now)
         self._ensure_control(now)
         self._ensure_rebalance(now)
+        self._ensure_checkpoint(now)
+        self._ensure_health(now)
 
     def _ensure_control(self, now: float):
         if self._control_ev is None and self._pending_work():
             self._control_ev = self.loop.schedule(now + self.dt, "control")
+
+    def _ensure_checkpoint(self, now: float):
+        """Keep the recovery-checkpoint cadence alive while any serving
+        replica holds in-flight slots (an idle fleet has nothing worth
+        checkpointing, and the loop must be able to drain)."""
+        if (self.checkpoint is not None
+                and self._checkpoint_ev is None
+                and any(r.serving and r.engine.n_active
+                        for r in self.replicas)):
+            self._checkpoint_ev = self.loop.schedule(
+                now + self.checkpoint.interval, "checkpoint")
+
+    def _ensure_health(self, now: float):
+        """Arm heartbeat chains for live replicas that lack one and the
+        recurring health-check scan.  Both are gated on pending work so
+        the event loop drains once the fleet goes (and stays) idle."""
+        if self.health is None or not self._pending_work():
+            return
+        for rep in self.replicas:
+            if (rep.state in (ReplicaState.RUNNING, ReplicaState.AT_RISK)
+                    and rep.beat_event is None):
+                # arming the chain records a birth beat: the replica is
+                # demonstrably alive right now, and without it a kill
+                # landing before the first scheduled heartbeat would
+                # leave the replica unmonitored — and unrecovered —
+                # forever
+                self.health.beat(rep.rid, now)
+                rep.beat_event = self.loop.schedule(
+                    now + self.health.heartbeat_interval
+                    * self.net_factor(now),
+                    "heartbeat", rid=rep.rid)
+        if self._health_ev is None:
+            self._health_ev = self.loop.schedule(
+                now + self.health.check_interval, "health_check")
+
+    def _unrecovered(self) -> bool:
+        """True while a hard-killed replica still holds a lost-work
+        manifest nobody has recovered."""
+        return any(r.state is ReplicaState.DEAD and r.lost is not None
+                   for r in self.replicas)
 
     def _ensure_rebalance(self, now: float):
         """Keep the recurring mid-stream-migration pass alive while any
@@ -444,9 +744,15 @@ class ServingCluster:
                 now + self.rebalance_interval, "rebalance")
 
     def _pending_work(self) -> bool:
+        # an unrecovered hard kill counts as pending work only when a
+        # FailureDetector is attached: with recovery ON the health loop
+        # keeps ticking until the manifest is recovered; with recovery
+        # OFF the loop drains and the lost requests stay demonstrably
+        # lost (the A/B the chaos benchmark measures)
         return (bool(self.router.queue) or bool(self._parked)
                 or bool(self._held) or bool(self._paused)
-                or any(r.serving and r.has_work() for r in self.replicas))
+                or any(r.serving and r.has_work() for r in self.replicas)
+                or (self.health is not None and self._unrecovered()))
 
     def _unpark(self, now: float):
         if not self._parked:
@@ -536,4 +842,10 @@ class ServingCluster:
     def run(self, *, max_time: float = 100_000.0) -> Dict[str, float]:
         """Dispatch events until the loop drains (or ``max_time``)."""
         self.loop.run(until=max_time)
+        # endpoint retry accounting lives on the endpoints themselves;
+        # fold it into the fleet summary once the run is over
+        self.metrics.endpoint_retries = sum(
+            rep.endpoint.retries for rep in self.replicas)
+        self.metrics.retry_backoff_s = sum(
+            rep.endpoint.backoff_s for rep in self.replicas)
         return self.metrics.summary(self.clock.now())

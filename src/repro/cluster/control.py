@@ -579,8 +579,13 @@ class ControlPlane:
     ``fallback`` is the market-mode fourth seam (a
     ``repro.market.FallbackStrategy``): where replacement capacity
     comes from when a spot notice fires.  None outside market runs.
+    ``straggler`` is the chaos-mode fifth seam (a
+    ``repro.cluster.health.StragglerPolicy``): quarantine/release
+    decisions over measured rates, evaluated on the control tick.
+    None disables straggler mitigation.
     """
     placement: PlacementPolicy
     preemption: PreemptionPolicy
     scaling: ScalingPolicy
     fallback: Optional[object] = None
+    straggler: Optional[object] = None

@@ -32,6 +32,11 @@ from repro.serving.workunit import (RESIDENCY_DEVICE, RESIDENCY_HOST,
                                     WorkUnit)
 
 
+class EndpointUnavailable(RuntimeError):
+    """Transient staging-store failure (armed by an ``endpoint_failure``
+    chaos fault); staging ops retry with exponential backoff."""
+
+
 class MigrationEndpoint:
     """Round-trips packed payloads through a checkpoint store.
 
@@ -39,34 +44,104 @@ class MigrationEndpoint:
     writes the restored arrays back into the units — proving the store
     path is lossless and measuring its real (wall-clock) cost.  Each
     unit's ``residency`` is stamped with the store class it staged
-    through.
+    through.  ``put``/``fetch`` are the persistent variants used by
+    recovery checkpoints: the payload stays in the store under its key
+    until ``discard``.
+
+    Fault injection: ``arm_failures(k)`` makes the next ``k`` staging
+    operations raise :class:`EndpointUnavailable`; every op runs under
+    retry-with-backoff (``retries`` / ``backoff_s`` account the cost),
+    so transient store outages never lose a unit — only slow it down.
     """
 
     kind = RESIDENCY_HOST
 
-    def __init__(self, store=None):
+    def __init__(self, store=None, *, max_retries: int = 6,
+                 backoff_base: float = 0.05):
         self.store = store if store is not None else self._default_store()
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self._fail_next = 0
+        self.retries = 0          # staging ops that needed a retry
+        self.backoff_s = 0.0      # accounted backoff (virtual seconds)
 
     def _default_store(self):
         return InMemoryStore()
 
+    # ------------------------------------------------- fault injection
+    def arm_failures(self, count: int):
+        """The next ``count`` staging ops fail transiently."""
+        self._fail_next += int(count)
+
+    def _with_retry(self, op):
+        delay = self.backoff_base
+        for attempt in range(self.max_retries + 1):
+            try:
+                if self._fail_next > 0:
+                    self._fail_next -= 1
+                    raise EndpointUnavailable(
+                        "staging store unavailable (injected fault)")
+                return op()
+            except EndpointUnavailable:
+                if attempt == self.max_retries:
+                    raise
+                self.retries += 1
+                self.backoff_s += delay
+                delay *= 2.0
+
+    # ------------------------------------------------------- staging
     def roundtrip(self, units: List[WorkUnit],
                   name: str) -> Tuple[float, float]:
         """Stage ``units`` through the store; returns real
         (checkpoint_s, restore_s) stage seconds."""
         if not units:
             return 0.0, 0.0
-        ck0 = self.store.timer.stages.get("checkpoint", 0.0)
-        rs0 = self.store.timer.stages.get("restore", 0.0)
-        self.store.save(name, [u.snapshot.cache for u in units])
-        caches = self.store.restore(name)
-        ckpt_s = self.store.timer.stages["checkpoint"] - ck0
-        restore_s = self.store.timer.stages["restore"] - rs0
-        for u, c in zip(units, caches):
-            u.snapshot.cache = {k: np.asarray(v) for k, v in c.items()}
-            u.residency = self.kind
+
+        def op():
+            ck0 = self.store.timer.stages.get("checkpoint", 0.0)
+            rs0 = self.store.timer.stages.get("restore", 0.0)
+            self.store.save(name, [u.snapshot.cache for u in units])
+            caches = self.store.restore(name)
+            ckpt_s = self.store.timer.stages["checkpoint"] - ck0
+            restore_s = self.store.timer.stages["restore"] - rs0
+            for u, c in zip(units, caches):
+                u.snapshot.cache = {k: np.asarray(v) for k, v in c.items()}
+                u.residency = self.kind
+            self.store.drop(name)
+            return ckpt_s, restore_s
+        return self._with_retry(op)
+
+    # ---------------------------------------------------- checkpoints
+    def put(self, units: List[WorkUnit], name: str) -> float:
+        """Persist the units' cache columns under ``name`` (recovery
+        checkpoint); returns real checkpoint stage seconds."""
+        if not units:
+            return 0.0
+
+        def op():
+            ck0 = self.store.timer.stages.get("checkpoint", 0.0)
+            self.store.save(name, [u.snapshot.cache for u in units])
+            return self.store.timer.stages["checkpoint"] - ck0
+        return self._with_retry(op)
+
+    def fetch(self, units: List[WorkUnit], name: str) -> float:
+        """Restore ``name``'s payloads back into ``units`` (recovery
+        landing); returns real restore stage seconds."""
+        if not units or not self.store.exists(name):
+            return 0.0
+
+        def op():
+            rs0 = self.store.timer.stages.get("restore", 0.0)
+            caches = self.store.restore(name)
+            restore_s = self.store.timer.stages["restore"] - rs0
+            for u, c in zip(units, caches):
+                u.snapshot.cache = {k: np.asarray(v) for k, v in c.items()}
+                u.residency = self.kind
+            return restore_s
+        return self._with_retry(op)
+
+    def discard(self, name: str):
         self.store.drop(name)
-        return ckpt_s, restore_s
 
 
 class HostEndpoint(MigrationEndpoint):

@@ -85,6 +85,27 @@ class ClusterMetrics:
         self.resumes = 0                 # paused units re-admitted
         self.preempt_stage_s = 0.0       # real store seconds spent pausing
         self.ledger = None               # SavingsLedger (market mode only)
+        # chaos & recovery (zero-filled in summary() so fault-free
+        # scenarios emit the same stable schema)
+        self.hard_kills = 0              # zero-notice terminations
+        self.requests_lost = 0           # in-flight on a dead replica,
+                                         # not (yet) recovered
+        self.requests_recovered = 0      # restored from checkpoint or
+                                         # readmitted from the prompt
+        self.recoveries = 0              # confirmed-dead recovery passes
+        self.replayed_tokens = 0         # decoded tokens lost + redone
+        self.recovery_latency_s = 0.0    # kill -> confirmed, summed
+        self.recovery_restore_s = 0.0    # real store restore seconds
+        self.checkpoints = 0             # checkpoint passes that staged
+        self.checkpointed_units = 0      # slots captured across passes
+        self.checkpoint_stage_s = 0.0    # real store checkpoint seconds
+        self.slowdowns = 0               # slowdown windows applied
+        self.contention_windows = 0      # network-contention windows
+        self.contention_delay_s = 0.0    # virtual staging delay added
+        self.endpoint_faults = 0         # endpoint_failure faults armed
+        self.endpoint_retries = 0        # staging ops that retried
+        self.retry_backoff_s = 0.0       # accounted retry backoff
+        self.quarantines = 0             # straggler quarantine orders
 
     def attach_ledger(self, ledger):
         """Market mode: the exchange's ``SavingsLedger`` reports savings
@@ -116,6 +137,25 @@ class ClusterMetrics:
 
     def on_resume(self, rid: int):
         self.resumes += 1
+
+    # ---------------------------------------------------- chaos/recovery
+    def on_hard_kill(self, rid: int, n_lost: int):
+        self.hard_kills += 1
+        self.requests_lost += n_lost
+
+    def on_recovery(self, rid: int, *, recovered: int, replayed: int,
+                    latency: float, restore_s: float):
+        self.recoveries += 1
+        self.requests_recovered += recovered
+        self.requests_lost = max(0, self.requests_lost - recovered)
+        self.replayed_tokens += replayed
+        self.recovery_latency_s += latency
+        self.recovery_restore_s += restore_s
+
+    def on_checkpoint(self, rid: int, units: int, ckpt_s: float):
+        self.checkpoints += 1
+        self.checkpointed_units += units
+        self.checkpoint_stage_s += ckpt_s
 
     # ------------------------------------------------------------ replica
     def on_launch(self, rid: int, itype: str, *,
@@ -253,6 +293,25 @@ class ClusterMetrics:
                 (s.peak_blocks / s.pool_blocks
                  for s in self.replicas.values() if s.pool_blocks),
                 default=0.0),
+            # chaos & recovery — always emitted (zero-filled) so
+            # fault-free scenarios keep a stable schema
+            "hard_kills": self.hard_kills,
+            "requests_lost": self.requests_lost,
+            "requests_recovered": self.requests_recovered,
+            "recoveries": self.recoveries,
+            "replayed_tokens": self.replayed_tokens,
+            "recovery_latency_s": self.recovery_latency_s,
+            "recovery_restore_s": self.recovery_restore_s,
+            "checkpoints": self.checkpoints,
+            "checkpointed_units": self.checkpointed_units,
+            "checkpoint_stage_s": self.checkpoint_stage_s,
+            "slowdowns": self.slowdowns,
+            "contention_windows": self.contention_windows,
+            "contention_delay_s": self.contention_delay_s,
+            "endpoint_faults": self.endpoint_faults,
+            "endpoint_retries": self.endpoint_retries,
+            "retry_backoff_s": self.retry_backoff_s,
+            "quarantines": self.quarantines,
         }
         for pool, cost in sorted(self.pool_dollar_cost(now).items()):
             out[f"dollar_cost_{pool}"] = cost

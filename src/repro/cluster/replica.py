@@ -34,13 +34,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import warnings
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.checkpointing import InMemoryStore
 from repro.core.rates import RateMonitor
-from repro.serving.engine import Request, ServingEngine, SlotSnapshot
+from repro.serving.engine import Request, ServingEngine
 from repro.serving.workunit import WorkUnit
 
 from repro.cluster.endpoint import (DeviceEndpoint, HostEndpoint,
@@ -63,12 +62,9 @@ class ReplicaState(enum.Enum):
     AT_RISK = "at_risk"          # rebalance recommendation received
     DRAINING = "draining"        # interruption notice: no new admissions
     TERMINATED = "terminated"
-
-
-def _deprecated(old: str, new: str):
-    warnings.warn(
-        f"Replica.{old} is deprecated; use the WorkUnit verb {new} instead",
-        DeprecationWarning, stacklevel=3)
+    DEAD = "dead"                # hard-killed with zero notice: nothing
+                                 # announced this — only a heartbeat-based
+                                 # FailureDetector can discover it
 
 
 class Replica:
@@ -114,7 +110,17 @@ class Replica:
         self.purchase = None
         self.completed: List[Request] = []
         self.step_event = None       # pending replica_step on the loop
+        self.beat_event = None       # pending heartbeat on the loop
         self.last_step_cost = 1.0 / itype.speed
+        # chaos state: slowdown windows degrade the effective speed,
+        # stragglers can be quarantined (serving but not routable), and
+        # a hard kill leaves a lost-work manifest for the detector
+        self.slow_factor = 1.0
+        self.slow_until = 0.0
+        self.quarantined = False
+        self.quarantined_t = 0.0
+        self.killed_t: Optional[float] = None
+        self.lost: Optional[Dict[str, list]] = None
 
     # ------------------------------------------------------------- status
     @property
@@ -128,8 +134,10 @@ class Replica:
 
     @property
     def admitting(self) -> bool:
-        """Routable: serving and not scheduled for interruption."""
-        return self.state == ReplicaState.RUNNING
+        """Routable: serving, not scheduled for interruption, and not
+        quarantined as a straggler (a quarantined replica finishes its
+        in-flight work but takes nothing new until its rate recovers)."""
+        return self.state == ReplicaState.RUNNING and not self.quarantined
 
     def has_work(self) -> bool:
         return self.engine.n_active > 0 or self.engine.n_queued > 0
@@ -140,8 +148,20 @@ class Replica:
     # ------------------------------------------------------------- driving
     @property
     def step_interval(self) -> float:
-        """Virtual seconds one engine step occupies on this instance."""
-        return 1.0 / self.itype.speed
+        """Virtual seconds one engine step occupies on this instance
+        (inflated by an active slowdown window — the RateMonitor then
+        *measures* the degradation, which is what straggler detection
+        keys off)."""
+        return self.slow_factor / self.itype.speed
+
+    def apply_slowdown(self, factor: float, until: float):
+        self.slow_factor = max(float(factor), 1.0)
+        self.slow_until = until
+
+    def clear_slowdown(self, now: float):
+        """End a slowdown window (no-op if a later window superseded)."""
+        if now >= self.slow_until:
+            self.slow_factor = 1.0
 
     def maybe_ready(self, now: float):
         if self.state == ReplicaState.LAUNCHING and now >= self.ready_at:
@@ -227,26 +247,43 @@ class Replica:
                 u.origin = self.rid
         return self.endpoint.roundtrip(units, name)
 
-    # ------------------------------------------------- deprecated verbs
-    def checkpoint_slots(self, slots: List[int]
-                         ) -> Tuple[List[SlotSnapshot],
-                                    Tuple[float, float]]:
-        """Deprecated: use ``pack_slots(slots)`` (returns WorkUnits)."""
-        _deprecated("checkpoint_slots", "pack_slots")
-        units, times = self.pack_slots(slots)
-        return [u.snapshot for u in units], times
+    # ------------------------------------------------ chaos & recovery
+    def checkpoint_units(self) -> Tuple[List[WorkUnit], float]:
+        """Periodic recovery checkpoint: NON-destructively snapshot
+        every live slot and persist the payloads in this replica's
+        endpoint store under a stable key.  The engine keeps decoding;
+        returns (units, real checkpoint stage seconds)."""
+        units = self.engine.checkpoint_units()
+        for u in units:
+            if u.origin is None:
+                u.origin = self.rid
+        ckpt_s = self.endpoint.put(units, f"ckpt_r{self.rid}") \
+            if units else 0.0
+        return units, ckpt_s
 
-    def restore(self, snaps: List[SlotSnapshot]):
-        """Deprecated: use ``unpack(units)``."""
-        _deprecated("restore", "unpack")
-        self.unpack([WorkUnit(snapshot=s) for s in snaps])
+    def hard_kill(self, now: float) -> Dict[str, list]:
+        """Zero-notice termination: the instance is simply gone.
 
-    def drain(self) -> Tuple[List[SlotSnapshot], List[Request],
-                             Tuple[float, float]]:
-        """Deprecated: use ``drain_units()`` (returns WorkUnits)."""
-        _deprecated("drain", "drain_units")
-        units, queued, times = self.drain_units()
-        return [u.snapshot for u in units], queued, times
+        Captures the lost-work manifest (in-flight slot requests, the
+        untouched queue, restore-queue requests) — the front-end's
+        request log, which is what a FailureDetector recovers from.
+        Tokens the engine already emitted are materialized first (the
+        async poll lag is a simulation artifact, not delivery
+        semantics), so the manifest records true kill-time progress and
+        replay accounting is exact; slots that had in fact finished
+        complete normally rather than count as lost.  The engine's
+        device state is NOT consulted again after this: everything not
+        checkpointed re-decodes from the prompt."""
+        self.engine._poll()
+        manifest = {
+            "active": [r for _, r in self.engine.slot_requests()],
+            "queued": list(self.engine.queued_requests()),
+            "pending": [u.request for u in self.engine.pending_units()],
+        }
+        self.state = ReplicaState.DEAD
+        self.killed_t = now
+        self.lost = manifest
+        return manifest
 
     def terminate(self):
         self.state = ReplicaState.TERMINATED

@@ -8,6 +8,11 @@ Cluster mode — replicated engines on a heterogeneous spot fleet, with
 rate-aware routing and a drained interruption:
   PYTHONPATH=src python -m repro.launch.serve --cluster --fleet 2x2.0,2x0.7 \
       --router rate_aware --requests 24 --interrupt-at 4
+
+Chaos drill — seeded fault soup (hard kills, slowdowns, contention,
+endpoint failures) survived via checkpoints + heartbeat detection:
+  PYTHONPATH=src python -m repro.launch.serve --cluster --fleet 2x1.0 \
+      --requests 10 --chaos 3 --chaos-rate 0.05 --checkpoint-every 3
 """
 
 from __future__ import annotations
@@ -94,14 +99,33 @@ def _make_exchange(args, fleet):
 
 
 def run_cluster(args, cfg, params):
-    from repro.cluster import (PREEMPTION_POLICIES, ROUTERS,
-                               SCALING_POLICIES, ServingCluster)
+    from repro.cluster import (CheckpointPolicy, FailureDetector,
+                               PREEMPTION_POLICIES, ROUTERS,
+                               SCALING_POLICIES, ServingCluster,
+                               StragglerPolicy)
+    from repro.runtime import FaultTrace
     fleet = _parse_fleet(args.fleet)
     preemption = PREEMPTION_POLICIES[args.preemption]() \
         if args.preemption != "none" else None
     exchange = None
     if args.market != "off":
         exchange = _make_exchange(args, fleet)
+    # --chaos SEED samples a mixed fault soup (hard kills, slowdowns,
+    # network contention, endpoint failures) and arms recovery: periodic
+    # checkpoints (--checkpoint-every), heartbeat failure detection, and
+    # straggler quarantine
+    trace = checkpoint = health = straggler = None
+    if args.chaos is not None:
+        trace = FaultTrace.chaos_sampled(
+            rate=args.chaos_rate, horizon=200.0, targets=len(fleet),
+            seed=args.chaos, rebalance_lead=args.rebalance_lead,
+            notice_deadline=args.notice_deadline)
+        health = FailureDetector()
+        straggler = StragglerPolicy()
+    if args.checkpoint_every is not None:
+        checkpoint = CheckpointPolicy(interval=args.checkpoint_every)
+    elif args.chaos is not None:
+        checkpoint = CheckpointPolicy()
     scaling = None
     if args.scaling == "cost_aware":
         if exchange is not None:
@@ -126,7 +150,9 @@ def run_cluster(args, cfg, params):
                         rebalance_interval=args.migrate_every,
                         preemption=preemption, scaling=scaling,
                         market=exchange,
-                        fallback=args.fallback if exchange else None)
+                        fallback=args.fallback if exchange else None,
+                        trace=trace, checkpoint=checkpoint,
+                        health=health, straggler=straggler)
     from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
     cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
@@ -150,6 +176,20 @@ def run_cluster(args, cfg, params):
     if out["preemptions"]:
         print(f"  preemptions={out['preemptions']} "
               f"resumes={out['resumes']}")
+    if out["hard_kills"] or out["checkpoints"]:
+        print(f"  chaos: hard_kills={out['hard_kills']} "
+              f"lost={out['requests_lost']} "
+              f"recovered={out['requests_recovered']} "
+              f"replayed_tokens={out['replayed_tokens']} "
+              f"checkpoints={out['checkpoints']} "
+              f"quarantines={out['quarantines']}")
+    if out["slowdowns"] or out["contention_windows"] \
+            or out["endpoint_faults"]:
+        print(f"  degraded: slowdowns={out['slowdowns']} "
+              f"contention_windows={out['contention_windows']} "
+              f"(+{out['contention_delay_s']:.1f}s staging) "
+              f"endpoint_faults={out['endpoint_faults']} "
+              f"retries={out['endpoint_retries']}")
     print(f"  fleet_dollar_cost=${out['fleet_dollar_cost']:.4f}")
     if exchange is not None:
         print(f"  market[{args.market}]: "
@@ -235,6 +275,19 @@ def main():
     ap.add_argument("--interrupt-at", type=float, default=None,
                     help="inject a spot interruption on replica 0 at this "
                          "virtual time")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="sample a seeded chaos soup (hard kills, "
+                         "slowdowns, network contention, endpoint "
+                         "failures) and arm heartbeat failure detection "
+                         "+ straggler quarantine + checkpoints")
+    ap.add_argument("--chaos-rate", type=float, default=0.02,
+                    help="chaos fault arrivals per virtual second "
+                         "(with --chaos)")
+    ap.add_argument("--checkpoint-every", type=float, default=None,
+                    metavar="S",
+                    help="periodic WorkUnit recovery checkpoints every S "
+                         "virtual seconds (default: on with --chaos at "
+                         "the policy's interval, else off)")
     ap.add_argument("--rebalance-lead", type=float, default=6.0)
     ap.add_argument("--notice-deadline", type=float, default=4.0)
     ap.add_argument("--arrival", default="batch",

@@ -15,9 +15,10 @@ cadence.
 from repro.runtime.clock import VirtualClock
 from repro.runtime.loop import Event, EventLoop
 from repro.runtime.faults import (FaultTrace, SpotEventFeed, SpotNotice,
-                                  LIFECYCLE_KINDS)
+                                  CHAOS_KINDS, LIFECYCLE_KINDS)
 
 __all__ = [
     "VirtualClock", "Event", "EventLoop",
-    "FaultTrace", "SpotEventFeed", "SpotNotice", "LIFECYCLE_KINDS",
+    "FaultTrace", "SpotEventFeed", "SpotNotice", "CHAOS_KINDS",
+    "LIFECYCLE_KINDS",
 ]

@@ -20,6 +20,15 @@ Consumers attach in one of two ways:
   the *identical* timestamps from a single trace.
 * ``trace.subscribe()`` / :class:`SpotEventFeed` — a poll-style cursor
   view for callers that drive their own time (legacy interface).
+
+Beyond the graceful lifecycle, the trace also carries a *chaos* model
+(``CHAOS_KINDS``): ``hard_kill`` (zero-notice termination),
+``slowdown`` (speed degraded by a factor over a window),
+``network_contention`` (staging/event-delivery latency inflated over a
+window), and ``endpoint_failure`` (transient MigrationEndpoint
+put/get errors).  Chaos faults ride the same injection, binding, and
+file round-trip machinery — one seeded soup (``chaos_sampled``)
+replays identically with recovery on or off.
 """
 
 from __future__ import annotations
@@ -35,17 +44,33 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class SpotNotice:
-    """One spot-lifecycle event delivered to a subscriber."""
+    """One fault event delivered to a subscriber.
+
+    Spot-lifecycle kinds (``LIFECYCLE_KINDS``) only use the first four
+    fields; the chaos kinds (``CHAOS_KINDS``) carry their parameters in
+    the trailing defaulted fields — ``factor``/``duration`` for
+    slowdown and network-contention windows, ``count`` for transient
+    endpoint failures.
+    """
     t: float
-    kind: str       # rebalance_recommendation | interruption_notice | terminate
+    kind: str       # LIFECYCLE_KINDS | CHAOS_KINDS
     target: int     # subscriber-defined id (instance / serving replica)
     lifecycle: int = -1   # interruption index in the trace: ties the three
                           # events of one lifecycle together even when the
                           # same target is interrupted repeatedly
+    factor: float = 1.0   # slowdown / contention severity multiplier
+    duration: float = 0.0  # window length (virtual seconds)
+    count: int = 1        # transient endpoint-failure arm count
 
 
 LIFECYCLE_KINDS = ("rebalance_recommendation", "interruption_notice",
                    "terminate")
+
+# The chaos model beyond the graceful §IV lifecycle: faults that arrive
+# with NO advance warning, so resilience depends on checkpoints and
+# detection rather than a drain window.
+CHAOS_KINDS = ("hard_kill", "slowdown", "network_contention",
+               "endpoint_failure")
 
 
 class FaultTrace:
@@ -56,6 +81,7 @@ class FaultTrace:
         self.rebalance_lead = rebalance_lead
         self.notice_deadline = notice_deadline
         self.interruptions: List[Tuple[float, int]] = []
+        self.chaos: List[SpotNotice] = []   # injected chaos faults, in order
         # sorted by (t, seq): bisect keeps polls O(log n), no private heap
         self._events: List[Tuple[float, int, SpotNotice]] = []
         self._seq = itertools.count()
@@ -82,9 +108,47 @@ class FaultTrace:
         return trace
 
     @classmethod
+    def chaos_sampled(cls, *, rate: float, horizon: float, targets: int,
+                      seed: int = 0, kinds: Tuple[str, ...] = CHAOS_KINDS,
+                      factor: float = 3.0, window: float = 45.0,
+                      fail_count: int = 2, rebalance_lead: float = 180.0,
+                      notice_deadline: float = 120.0) -> "FaultTrace":
+        """Seeded mixed fault soup: Poisson(``rate``/s) chaos arrivals
+        over ``horizon`` s, drawing each fault's kind from ``kinds`` and
+        cycling victims through ``targets`` ids.  Slowdown/contention
+        windows use (``factor``, ``window``); endpoint failures arm
+        ``fail_count`` transient errors.  One seed, one soup — the
+        recovery-on/off A/B replays the identical schedule."""
+        trace = cls(rebalance_lead=rebalance_lead,
+                    notice_deadline=notice_deadline)
+        rng = np.random.default_rng(seed)
+        t, k = 0.0, 0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= horizon:
+                break
+            kind = kinds[int(rng.integers(len(kinds)))]
+            tgt = k % targets
+            if kind == "hard_kill":
+                trace.inject_hard_kill(t, tgt)
+            elif kind == "slowdown":
+                trace.inject_slowdown(t, tgt, factor=factor,
+                                      duration=window)
+            elif kind == "network_contention":
+                trace.inject_contention(t, factor=factor, duration=window)
+            elif kind == "endpoint_failure":
+                trace.inject_endpoint_failure(t, tgt, count=fail_count)
+            else:
+                trace.inject(t, tgt)
+            k += 1
+        return trace
+
+    @classmethod
     def from_file(cls, path: str, *, rebalance_lead: float = 180.0,
                   notice_deadline: float = 120.0) -> "FaultTrace":
-        """Trace file: one ``<t> <target>`` pair per line (# comments)."""
+        """Trace file: ``<t> <target>`` per line for spot interruptions
+        (the original format), ``<t> <target> <kind> [key=val ...]`` for
+        chaos kinds (# comments)."""
         trace = cls(rebalance_lead=rebalance_lead,
                     notice_deadline=notice_deadline)
         with open(path) as fh:
@@ -92,17 +156,33 @@ class FaultTrace:
                 line = line.split("#", 1)[0].strip()
                 if not line:
                     continue
-                t, target = line.split()
-                trace.inject(float(t), int(target))
+                parts = line.split()
+                if len(parts) == 2:
+                    t, target = parts
+                    trace.inject(float(t), int(target))
+                    continue
+                t, target, kind = parts[:3]
+                kw = dict(p.split("=", 1) for p in parts[3:])
+                trace.inject_chaos(
+                    float(t), int(target), kind,
+                    factor=float(kw.get("factor", 1.0)),
+                    duration=float(kw.get("duration", 0.0)),
+                    count=int(kw.get("count", 1)))
         return trace
 
     def to_file(self, path: str):
-        """Write the interruption schedule as ``<t> <target>`` lines;
-        ``from_file`` round-trips it exactly (``repr`` floats)."""
+        """Write the fault schedule; ``from_file`` round-trips it
+        exactly (``repr`` floats) — spot lines keep the original
+        two-field format, chaos lines append kind + parameters."""
         with open(path, "w") as fh:
-            fh.write("# fault trace: <t> <target> per line\n")
+            fh.write("# fault trace: <t> <target> [<kind> key=val ...] "
+                     "per line\n")
             for t, target in self.interruptions:
                 fh.write(f"{t!r} {target}\n")
+            for n in self.chaos:
+                fh.write(f"{n.t!r} {n.target} {n.kind} "
+                         f"factor={n.factor!r} duration={n.duration!r} "
+                         f"count={n.count}\n")
 
     def inject(self, t: float, target: int):
         """FIS analogue: schedule the full lifecycle for ``target``."""
@@ -114,10 +194,54 @@ class FaultTrace:
                 SpotNotice(t_notice, "interruption_notice", target, lc),
                 SpotNotice(t_notice + self.notice_deadline, "terminate",
                            target, lc)):
-            seq = next(self._seq)
-            bisect.insort(self._events, (notice.t, seq, notice))
-            for loop, kind in self._sinks:
-                loop.schedule(notice.t, kind, notice=notice)
+            self._push(notice)
+
+    def inject_chaos(self, t: float, target: int, kind: str, *,
+                     factor: float = 1.0, duration: float = 0.0,
+                     count: int = 1) -> SpotNotice:
+        """Schedule ONE zero-warning chaos fault (no lifecycle: the
+        whole point is that nobody gets a drain window)."""
+        if kind not in CHAOS_KINDS:
+            raise ValueError(f"unknown chaos kind {kind!r}; "
+                             f"choose from {CHAOS_KINDS}")
+        notice = SpotNotice(t, kind, target, -1, factor, duration, count)
+        self.chaos.append(notice)
+        self._push(notice)
+        return notice
+
+    def inject_hard_kill(self, t: float, target: int) -> SpotNotice:
+        """Terminate ``target`` at ``t`` with zero notice."""
+        return self.inject_chaos(t, target, "hard_kill")
+
+    def inject_slowdown(self, t: float, target: int, *,
+                        factor: float = 3.0,
+                        duration: float = 60.0) -> SpotNotice:
+        """Degrade ``target``'s speed by ``factor`` for ``duration`` s
+        (processor performance variability)."""
+        return self.inject_chaos(t, target, "slowdown", factor=factor,
+                                 duration=duration)
+
+    def inject_contention(self, t: float, *, target: int = -1,
+                          factor: float = 3.0,
+                          duration: float = 60.0) -> SpotNotice:
+        """Inflate migration-staging and event-delivery latency by
+        ``factor`` for ``duration`` s (network contention; target -1 =
+        the whole fabric)."""
+        return self.inject_chaos(t, target, "network_contention",
+                                 factor=factor, duration=duration)
+
+    def inject_endpoint_failure(self, t: float, target: int, *,
+                                count: int = 1) -> SpotNotice:
+        """Arm ``target``'s MigrationEndpoint to fail its next ``count``
+        staging operations transiently."""
+        return self.inject_chaos(t, target, "endpoint_failure",
+                                 count=count)
+
+    def _push(self, notice: SpotNotice):
+        seq = next(self._seq)
+        bisect.insort(self._events, (notice.t, seq, notice))
+        for loop, kind in self._sinks:
+            loop.schedule(notice.t, kind, notice=notice)
 
     # ------------------------------------------------------------ consume
     def events(self) -> List[SpotNotice]:

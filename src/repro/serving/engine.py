@@ -58,7 +58,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -105,12 +104,6 @@ class Request:
         return self.arrival_t + self.slo.deadline
 
 
-def _deprecated(old: str, new: str):
-    warnings.warn(
-        f"{old} is deprecated; use the WorkUnit verb {new} instead",
-        DeprecationWarning, stacklevel=3)
-
-
 def request_cost(req: Request,
                  discount: float = DEFAULT_PREFILL_DISCOUNT) -> float:
     """Router load of an unstarted request, with prefill discounted.
@@ -139,6 +132,12 @@ class SlotSnapshot:
     next_tok: int               # next token to feed
     cache_len: int
     cache: Dict[str, np.ndarray]  # this slot's cache columns (host)
+    # sampler rng at checkpoint time (host copy) — stamped by the
+    # recovery path (``checkpoint_units``) so a temperature>0 stream
+    # resumed into an otherwise-empty engine replays its lost tail
+    # bit-identically; migration snapshots leave it None (the live rng
+    # keeps advancing)
+    rng: Optional[np.ndarray] = None
 
     @property
     def remaining_tokens(self) -> int:
@@ -674,6 +673,13 @@ class ServingEngine:
         """
         req = snap.request
         maxfed = self._req_maxfed(req)
+        # recovery checkpoints carry the sampler rng: restoring into an
+        # otherwise-empty sampled engine replays the exact draws of the
+        # lost tail (the rng is shared across slots, so a busy engine —
+        # or a greedy one, which never consumes it — keeps its own)
+        if (snap.rng is not None and self.temperature > 0
+                and self.n_active == 0):
+            self.sample = self.sample._replace(rng=jnp.asarray(snap.rng))
         if self._alloc is not None:
             blocks = self._alloc.allocate(slot, self._blocks_needed(maxfed))
             self._write_table_row(slot, blocks)
@@ -868,8 +874,35 @@ class ServingEngine:
     #
     # One verb set for every in-flight-request move (the paper's PUP
     # interface): ``pack``/``unpack`` for migration and drain,
-    # ``preempt``/``resume`` for SLO-aware pausing.  The old
-    # snapshot_slots/restore_slots/drain names are deprecated shims.
+    # ``preempt``/``resume`` for SLO-aware pausing, and the
+    # non-destructive ``checkpoint_units`` for periodic recovery
+    # checkpoints.
+
+    def _slot_cols(self, slot: int, cache_host: Dict[str, np.ndarray],
+                   kv_keys) -> Dict[str, np.ndarray]:
+        """Gather one slot's cache columns in the canonical contiguous
+        layout (paged engines merge the slot's blocks and pad to
+        ``max_seq``; dense engines just take the batch row)."""
+        cols = {}
+        for k, v in cache_host.items():
+            ax = self._cache_axes[k]
+            if k in kv_keys:
+                # gather the slot's blocks into the canonical
+                # contiguous column (block-size-agnostic snapshot)
+                blocks = list(self._alloc.owned(slot))
+                rows = v.take(blocks, axis=ax)
+                sh = rows.shape
+                merged = rows.reshape(
+                    sh[:ax] + (sh[ax] * sh[ax + 1],) + sh[ax + 2:])
+                pad = self.max_seq - merged.shape[ax]
+                if pad:
+                    widths = [(0, 0)] * merged.ndim
+                    widths[ax] = (0, pad)
+                    merged = np.pad(merged, widths)
+                cols[k] = merged
+            else:
+                cols[k] = v.take(slot, axis=ax)
+        return cols
 
     def _snapshot_slots(self, slots: Optional[List[int]] = None
                         ) -> List[Tuple[int, SlotSnapshot]]:
@@ -894,31 +927,12 @@ class ServingEngine:
         snaps = []
         deactivate = self.sample.active
         for slot in occupied:
-            cols = {}
-            for k, v in cache_host.items():
-                ax = self._cache_axes[k]
-                if k in kv_keys:
-                    # gather the slot's blocks into the canonical
-                    # contiguous column (block-size-agnostic snapshot)
-                    blocks = list(self._alloc.owned(slot))
-                    rows = v.take(blocks, axis=ax)
-                    sh = rows.shape
-                    merged = rows.reshape(
-                        sh[:ax] + (sh[ax] * sh[ax + 1],) + sh[ax + 2:])
-                    pad = self.max_seq - merged.shape[ax]
-                    if pad:
-                        widths = [(0, 0)] * merged.ndim
-                        widths[ax] = (0, pad)
-                        merged = np.pad(merged, widths)
-                    cols[k] = merged
-                else:
-                    cols[k] = v.take(slot, axis=ax)
             snaps.append((slot, SlotSnapshot(
                 request=self._slots[slot],
                 fed=int(self._fed[slot]),
                 next_tok=int(self._next_tok_host[slot]),
                 cache_len=int(self._fed[slot]),
-                cache=cols,
+                cache=self._slot_cols(slot, cache_host, kv_keys),
             )))
             self._slots[slot] = None
             if self._alloc is not None:
@@ -1000,21 +1014,53 @@ class ServingEngine:
         queued, self._queue = self._queue, []
         return units, queued
 
-    # ------------------------------------------------- deprecated verbs
-    def snapshot_slots(self, slots: Optional[List[int]] = None
-                       ) -> List[SlotSnapshot]:
-        """Deprecated: use ``pack(slots)`` (returns ``WorkUnit``s)."""
-        _deprecated("snapshot_slots", "pack")
-        return [u.snapshot for u in self.pack(slots)]
+    def pending_units(self) -> Tuple["WorkUnit", ...]:
+        """Restore-queue units awaiting admission (control-plane and
+        failure-recovery visibility)."""
+        return tuple(self._restore)
 
-    def restore_slots(self, snapshots: List[SlotSnapshot]):
-        """Deprecated: use ``unpack(units)``."""
+    def checkpoint_units(self) -> List["WorkUnit"]:
+        """NON-destructive checkpoint of every occupied slot.
+
+        Unlike ``pack``, the slots keep decoding: the returned units
+        hold a *frozen* deep copy of each request (``out_tokens``
+        truncated to checkpoint progress) plus the sampler rng, so a
+        hard-killed replica's work restores from its last checkpoint
+        and re-decodes only the lost tail — bit-identically for greedy
+        streams (and for sampled streams resumed into an empty engine,
+        which replays the same rng draws).  Unit identity (uid / hop
+        history / origin) is copied, not shared: provenance recorded on
+        the live slot after the checkpoint stays on the live unit.
+        """
         from repro.serving.workunit import WorkUnit
-        _deprecated("restore_slots", "unpack")
-        self._restore.extend(WorkUnit(snapshot=s) for s in snapshots)
-
-    def drain(self) -> Tuple[List[SlotSnapshot], List[Request]]:
-        """Deprecated: use ``drain_units()`` (returns ``WorkUnit``s)."""
-        _deprecated("drain", "drain_units")
-        units, queued = self.drain_units()
-        return [u.snapshot for u in units], queued
+        self._poll()
+        occupied = [i for i, r in enumerate(self._slots) if r is not None]
+        if not occupied:
+            return []
+        cache_raw, rng_raw = self._fetch((self.state.cache,
+                                          self.sample.rng))
+        cache_host = {k: np.asarray(v) for k, v in cache_raw.items()}
+        rng_host = np.asarray(rng_raw)
+        kv_keys = (set(zoo.paged_kv_keys(self.cfg))
+                   if self._alloc is not None else set())
+        units = []
+        for slot in occupied:
+            req = self._slots[slot]
+            frozen = dataclasses.replace(
+                req, out_tokens=list(req.out_tokens))
+            snap = SlotSnapshot(
+                request=frozen,
+                fed=int(self._fed[slot]),
+                next_tok=int(self._next_tok_host[slot]),
+                cache_len=int(self._fed[slot]),
+                cache=self._slot_cols(slot, cache_host, kv_keys),
+                rng=rng_host.copy(),
+            )
+            meta = self._unit_meta.get(slot)
+            if meta is None:
+                units.append(WorkUnit(snapshot=snap))
+            else:
+                uid, hops, origin = meta
+                units.append(WorkUnit(snapshot=snap, uid=uid,
+                                      hops=list(hops), origin=origin))
+        return units

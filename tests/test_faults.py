@@ -67,6 +67,69 @@ def test_equal_timestamp_events_poll_in_injection_order():
     assert sub.poll(10.0) == []
 
 
+def test_chaos_kinds_file_roundtrip(tmp_path):
+    """Chaos faults ride the same trace file as spot lifecycles: mixed
+    schedules round-trip exactly, parameters included."""
+    trace = FaultTrace(rebalance_lead=6.0, notice_deadline=4.0)
+    trace.inject(1.0 / 3.0, 2)                       # spot lifecycle
+    trace.inject_hard_kill(7.25, 0)
+    trace.inject_slowdown(2.0 / 7.0, 1, factor=3.5, duration=12.5)
+    trace.inject_contention(9.0, factor=2.0, duration=8.0)
+    trace.inject_endpoint_failure(11.0, 1, count=3)
+    p = tmp_path / "chaos.txt"
+    trace.to_file(str(p))
+    back = FaultTrace.from_file(str(p), rebalance_lead=6.0,
+                                notice_deadline=4.0)
+    assert back.interruptions == trace.interruptions
+    assert [(n.t, n.kind, n.target, n.factor, n.duration, n.count)
+            for n in back.chaos] \
+        == [(n.t, n.kind, n.target, n.factor, n.duration, n.count)
+            for n in trace.chaos]
+    assert [(n.t, n.kind, n.target) for n in back.events()] \
+        == [(n.t, n.kind, n.target) for n in trace.events()]
+
+
+def test_chaos_inject_after_bind_reaches_the_loop():
+    """Chaos kinds injected after ``bind`` land on the bound loop in
+    time order, interleaved with lifecycle events, parameters intact."""
+    trace = FaultTrace(rebalance_lead=10.0, notice_deadline=5.0)
+    trace.inject_slowdown(40.0, 2, factor=2.0, duration=6.0)  # before bind
+    loop = EventLoop()
+    seen = []
+    loop.register("spot", lambda ev, t: seen.append(
+        (t, ev.payload["notice"].kind, ev.payload["notice"].target)))
+    trace.bind(loop)
+    trace.inject_hard_kill(25.0, 0)       # after bind, BEHIND the first
+    trace.inject(20.0, 1)                 # lifecycle interleaves
+    notice = trace.inject_endpoint_failure(45.0, 1, count=2)
+    assert notice.count == 2
+    loop.run()
+    assert seen == [
+        (20.0, "rebalance_recommendation", 1),
+        (25.0, "hard_kill", 0),
+        (30.0, "interruption_notice", 1),
+        (35.0, "terminate", 1),
+        (40.0, "slowdown", 2),
+        (45.0, "endpoint_failure", 1)]
+
+
+def test_chaos_sampled_soup_is_seed_deterministic():
+    """One seed, one soup: ``chaos_sampled`` replays identically (the
+    recovery-on/off A/B depends on this), and every fault is a known
+    chaos kind."""
+    from repro.runtime import CHAOS_KINDS
+    kw = dict(rate=0.1, horizon=300.0, targets=4, seed=11)
+    a = FaultTrace.chaos_sampled(**kw)
+    b = FaultTrace.chaos_sampled(**kw)
+    assert a.chaos, "soup sampled empty"
+    assert [(n.t, n.kind, n.target) for n in a.chaos] \
+        == [(n.t, n.kind, n.target) for n in b.chaos]
+    assert all(n.kind in CHAOS_KINDS for n in a.chaos)
+    c = FaultTrace.chaos_sampled(**{**kw, "seed": 12})
+    assert [(n.t, n.kind) for n in a.chaos] \
+        != [(n.t, n.kind) for n in c.chaos]
+
+
 def test_market_driven_schedule_is_purchase_deterministic():
     """Same exchange seed + same purchase sequence -> bit-identical
     interruption schedule in the trace (whole-cluster determinism)."""

@@ -8,7 +8,7 @@ The PR-5 tentpole invariants:
   and mid-prefill-chunk, plus a hypothesis property over random
   interleavings).
 * **Deprecation** — the old snapshot_slots/restore_slots/
-  checkpoint_slots/drain names still work but warn.
+  checkpoint_slots/drain names are gone; the verbs are the only API.
 * **Endpoints** — migration payloads stage through the replica's
   ``MigrationEndpoint``; accelerator instances stage device-resident.
 * **Policies** — SLO preemption frees batch slots for urgent interactive
@@ -200,37 +200,18 @@ def test_any_interleaving_roundtrips_identically(models, ops):
 
 
 # ------------------------------------------------------- deprecation
-def test_deprecated_verbs_warn(models):
-    """snapshot_slots/restore_slots/drain (engine) and checkpoint_slots/
-    restore/drain (replica) still work as thin wrappers, but warn."""
+def test_deprecated_verbs_removed(models):
+    """The PR-5 deprecation shims are gone: the PUP verbs (pack/unpack/
+    drain_units on the engine, pack_slots/unpack/drain_units on the
+    replica) are the only spelling."""
     cfg, params = models["granite-8b"]
     eng = _engine(cfg, params)
-    req = Request(rid=0, prompt=_prompt(cfg, 5, seed=5),
-                  max_new_tokens=6)
-    eng.submit(req)
-    eng.step()
-    with pytest.warns(DeprecationWarning, match="pack"):
-        snaps = eng.snapshot_slots()
-    assert len(snaps) == 1
-    with pytest.warns(DeprecationWarning, match="unpack"):
-        eng.restore_slots(snaps)
-    eng.step()
-    with pytest.warns(DeprecationWarning, match="drain_units"):
-        snaps, queued = eng.drain()
-    assert len(snaps) == 1 and not queued
-
+    for old in ("snapshot_slots", "restore_slots", "drain"):
+        assert not hasattr(eng, old), old
     rep = Replica(0, cfg, params, InstanceType("r0", 1.0),
                   batch_size=2, max_seq=64)
-    with pytest.warns(DeprecationWarning, match="unpack"):
-        rep.restore(snaps)
-    rep.step_once(now=0.0)
-    with pytest.warns(DeprecationWarning, match="pack_slots"):
-        snaps, _times = rep.checkpoint_slots(
-            [s for s, _ in rep.engine.slot_costs()])
-    with pytest.warns(DeprecationWarning, match="unpack"):
-        rep.restore(snaps)
-    with pytest.warns(DeprecationWarning, match="drain_units"):
-        rep.drain()
+    for old in ("checkpoint_slots", "restore", "drain"):
+        assert not hasattr(rep, old), old
 
 
 # --------------------------------------------------------- endpoints
