@@ -23,6 +23,13 @@ Guarded figures, dispatched on the dump's ``scenario`` field:
   higher goodput than the recovery-off run (which must demonstrably
   lose work), goodput at or above ``--min-chaos-goodput``, and
   replayed-token overhead at or below ``--max-replay-frac``.
+* ``cluster_matrix`` (BENCH_matrix.json) — every scenario-matrix cell
+  (shape x router x preemption x fleet, plus the diurnal mega-cell)
+  must be populated with interactive attainment at or above
+  ``--min-cell-attainment``; the consolidated simulator throughput
+  (``matrix_total`` row, ``sim_events_per_sec``) must stay at or above
+  ``--min-sim-events-per-sec``; and the whole section's wall clock
+  must stay at or below ``--max-matrix-seconds``.
 
 Usage:
   python benchmarks/guard.py BENCH_engine_throughput.json --min-speedup 3.0
@@ -30,6 +37,7 @@ Usage:
   python benchmarks/guard.py BENCH_cluster_spot_market.json --min-savings 40
   python benchmarks/guard.py BENCH_engine_churn.json --min-churn-speedup 1.0
   python benchmarks/guard.py BENCH_cluster_chaos.json --min-chaos-goodput 1.0
+  python benchmarks/guard.py BENCH_matrix.json --min-sim-events-per-sec 2000
   python benchmarks/guard.py BENCH_*.json          # guard all known dumps
 """
 
@@ -109,6 +117,21 @@ def chaos_stats(bench: dict) -> tuple:
             int(_derived(bench, row, r"lost=[0-9]+vs([0-9]+)")),
             _derived_str(bench, row, r"bit_identical=(\w+)") == "True",
             _derived(bench, row, r"replay_frac=([0-9.]+)"))
+
+
+def matrix_cells(bench: dict) -> list:
+    """[(name, attainment), ...] for every scenario-matrix cell row."""
+    cells = []
+    for r in bench.get("rows", []):
+        name = r.get("name", "")
+        if not name.startswith("matrix_") or name == "matrix_total":
+            continue
+        m = re.search(r"attainment=([0-9.]+)", r.get("derived", ""))
+        if m is None:
+            raise SystemExit(f"guard: matrix cell {name} has no "
+                             f"attainment field — cell not populated")
+        cells.append((name, float(m.group(1))))
+    return cells
 
 
 def check(bench: dict, args) -> bool:
@@ -214,6 +237,42 @@ def check(bench: dict, args) -> bool:
               f">= {args.min_chaos_goodput:.3f}, replay overhead "
               f"{replay:.3f} <= {args.max_replay_frac:.3f}")
         return True
+    if scenario == "cluster_matrix":
+        cells = matrix_cells(bench)
+        # 5 shapes x 2 routers x 2 preemption x 2 fleets + 1 mega cell
+        if len(cells) < 41:
+            print(f"guard: FAIL — scenario matrix has only {len(cells)} "
+                  f"populated cell(s), expected 41", file=sys.stderr)
+            return False
+        low = [(n, a) for n, a in cells
+               if a < args.min_cell_attainment]
+        if low:
+            for n, a in low:
+                print(f"guard: FAIL — matrix cell {n} interactive "
+                      f"attainment {a:.3f} below "
+                      f"{args.min_cell_attainment:.2f}", file=sys.stderr)
+            return False
+        evps = _derived(bench, "matrix_total",
+                        r"sim_events_per_sec=([0-9.]+)")
+        if evps < args.min_sim_events_per_sec:
+            print(f"guard: FAIL — simulator throughput {evps:,.0f} "
+                  f"events/s regressed below "
+                  f"{args.min_sim_events_per_sec:,.0f} (hot-path "
+                  f"regression in loop/router/metrics)", file=sys.stderr)
+            return False
+        wall = float(bench.get("section_seconds", 0.0))
+        if wall > args.max_matrix_seconds:
+            print(f"guard: FAIL — matrix wall clock {wall:.1f}s exceeds "
+                  f"the {args.max_matrix_seconds:.0f}s ceiling",
+                  file=sys.stderr)
+            return False
+        worst = min(cells, key=lambda c: c[1])
+        print(f"guard: OK — {len(cells)} matrix cells populated, worst "
+              f"attainment {worst[1]:.3f} ({worst[0]}) >= "
+              f"{args.min_cell_attainment:.2f}, {evps:,.0f} sim "
+              f"events/s >= {args.min_sim_events_per_sec:,.0f}, wall "
+              f"{wall:.1f}s <= {args.max_matrix_seconds:.0f}s")
+        return True
     print(f"guard: skip — no guard registered for scenario {scenario!r}")
     return True
 
@@ -242,6 +301,17 @@ def main() -> None:
     ap.add_argument("--max-replay-frac", type=float, default=0.25,
                     help="maximum replayed-token overhead as a fraction "
                          "of useful tokens (cluster_chaos dumps)")
+    ap.add_argument("--min-cell-attainment", type=float, default=0.6,
+                    help="minimum interactive attainment for EVERY "
+                         "scenario-matrix cell (cluster_matrix dumps)")
+    ap.add_argument("--min-sim-events-per-sec", type=float, default=2000.0,
+                    help="minimum consolidated simulator event "
+                         "throughput across the matrix (cluster_matrix "
+                         "dumps; catches loop/router/metrics hot-path "
+                         "regressions)")
+    ap.add_argument("--max-matrix-seconds", type=float, default=600.0,
+                    help="wall-clock ceiling for the whole matrix "
+                         "section (cluster_matrix dumps)")
     args = ap.parse_args()
     ok = True
     for path in args.bench_json:

@@ -22,6 +22,13 @@ Sections (run all, or pick with positional names / ``--scenario``):
                       endpoint failure survived via checkpoints, heartbeat
                       failure detection and straggler quarantine vs the
                       same soup with recovery off (demonstrably lost work)
+  cluster_matrix      million-request scenario matrix: behaviour shapes
+                      (pulse_spikes/sawtooth/staircase/epochs/
+                      staged_plateau) x router x preemption x fleet on
+                      the SimEngine + a 10^6-request diurnal mega-cell;
+                      consolidated BENCH_matrix.json with per-cell
+                      attainment/p99/tok_per_s/dollar and a global
+                      sim_events_per_sec
   engine_throughput   ServingEngine A/B: chunked bulk prefill + sync-free
                       batched decode vs the streamed per-token baseline
   engine_churn        paged-cache A/B: continuous batching on a block pool
@@ -924,6 +931,124 @@ def engine_churn(quick: bool = False):
 
 
 # ------------------------------------------------------------------ roofline
+def cluster_matrix(quick: bool = False):
+    """Million-request scenario matrix (ISSUE 9, arXiv:2410.10655 /
+    arXiv:2510.15147 methodology).
+
+    Behaviour shapes x {rate_aware, slo_aware} x {preemption off, on} x
+    {uniform, hetero} fleets on the token-accounting ``SimEngine`` —
+    40 cells of behaviour-shaped load through the REAL control plane
+    (router, preemptor, autoscaler, metrics), plus one diurnal
+    million-request mega-cell exercising the bounded-memory path
+    (streaming metrics, digest-only journal, place_cap routing).
+    Emits one consolidated BENCH_matrix.json the guard holds floors on:
+    per-cell attainment, a global sim_events_per_sec, and the section
+    wall clock.
+    """
+    from repro.cluster.cluster import ServingCluster
+    from repro.cluster.control import SLOPreemption
+    from repro.cluster.replica import InstanceType
+    from repro.cluster.router import DeadlineAwareRouter, RateAwareRouter
+    from repro.serving.shapes import make_shape
+
+    n_cell = 60 if quick else 400
+    n_mega = 20_000 if quick else 1_000_000
+
+    # capacity model (replica.step_once): prefill chunk tokens are
+    # serialized per replica at `prefill_discount/speed` virtual-seconds
+    # each, while decode steps amortize across the batch lanes — so one
+    # request costs (0.35*P_mean + out_mean/batch)/speed replica-seconds.
+    # Workload mix (ShapedArrivals): 30% interactive (P~5.5, out~5),
+    # 70% batch (P~10, out~14).
+    p_mean, out_mean = 8.65, 11.3
+
+    def fleet_rate(fleet, batch, util):
+        per_req_speed_s = 0.35 * p_mean + out_mean / batch
+        return util * sum(it.speed for it in fleet) / per_req_speed_s
+
+    shapes = ["pulse_spikes", "sawtooth", "staircase", "epochs",
+              "staged_plateau"]
+    fleets = {
+        "uniform": [InstanceType("std.1x", 4.0, spot=False)
+                    for _ in range(4)],
+        "hetero": ([InstanceType("fast.2x", 8.0, spot=False,
+                                 cost_per_hour=2.0) for _ in range(2)]
+                   + [InstanceType("slow.1x", 4.0, spot=False)
+                      for _ in range(2)]),
+    }
+    routers = {"rate_aware": RateAwareRouter,
+               "slo_aware": DeadlineAwareRouter}
+    total_events, total_wall, n_cells = 0, 0.0, 0
+
+    for fleet_name, mk_fleet in fleets.items():
+        # offered mean rate = 70% of capacity, so every shape's peak
+        # (1.5-3x mean) transiently overloads and its trough underloads
+        # the same fleet
+        rate = fleet_rate(mk_fleet, 8, 0.7)
+        for shape_name in shapes:
+            for router_name, router_cls in routers.items():
+                for pre in (False, True):
+                    cl = ServingCluster(
+                        None, None, list(mk_fleet), engine="sim",
+                        router=router_cls(), batch_size=8, max_seq=64,
+                        decode_block=4, seed=0,
+                        admission="priority" if pre else "fifo",
+                        preemption=SLOPreemption() if pre else None)
+                    cl.attach_arrivals(make_shape(
+                        shape_name, n_cell, rate=rate, period=60.0,
+                        seed=7))
+                    t0 = time.perf_counter()
+                    s = cl.run(max_time=200_000.0)
+                    wall = time.perf_counter() - t0
+                    total_events += cl.loop.dispatched
+                    total_wall += wall
+                    n_cells += 1
+                    att = s.get("attainment_interactive", 1.0)
+                    row(f"matrix_{shape_name}_{router_name}_"
+                        f"{'pre' if pre else 'nopre'}_{fleet_name}",
+                        wall * 1e6 / max(s["completed"], 1),
+                        f"attainment={att:.3f};"
+                        f"p99={s['p99_latency']:.2f};"
+                        f"tok_per_s={s['tok_per_s']:.2f};"
+                        f"dollar={s['fleet_dollar_cost']:.4f};"
+                        f"completed={s['completed']}")
+
+    # ---- the 10^6-request diurnal mega-cell: bounded-memory path ----
+    mega_fleet = [InstanceType("std.2x", 8.0, spot=False)
+                  for _ in range(8)]
+    rate = fleet_rate(mega_fleet, 64, 0.6)  # peak 1.6x -> ~0.96 capacity
+    day = n_mega / rate                     # the trace spans ~one "day"
+    cl = ServingCluster(
+        None, None, mega_fleet, engine="sim",
+        router=RateAwareRouter(place_cap=128),
+        batch_size=64, max_seq=64, decode_block=8, seed=0,
+        journal=False, retain_traces=False, timeline_cap=10_000,
+        dispatch_coalesce=0.25)
+    cl.attach_arrivals(make_shape("diurnal", n_mega, rate=rate,
+                                  period=day, seed=11))
+    t0 = time.perf_counter()
+    s = cl.run(max_time=day * 20.0)
+    wall = time.perf_counter() - t0
+    total_events += cl.loop.dispatched
+    total_wall += wall
+    n_cells += 1
+    assert s["completed"] == n_mega, \
+        f"mega cell dropped work: {s['completed']}/{n_mega}"
+    att = s.get("attainment_interactive", 1.0)
+    row("matrix_diurnal_mega", wall * 1e6 / max(s["completed"], 1),
+        f"attainment={att:.3f};p99={s['p99_latency']:.2f};"
+        f"tok_per_s={s['tok_per_s']:.2f};"
+        f"dollar={s['fleet_dollar_cost']:.4f};"
+        f"completed={s['completed']};"
+        f"events={cl.loop.dispatched};"
+        f"cell_events_per_sec={cl.loop.dispatched / max(wall, 1e-9):.0f}")
+
+    row("matrix_total", total_wall * 1e6 / max(total_events, 1),
+        f"sim_events_per_sec={total_events / max(total_wall, 1e-9):.0f};"
+        f"events={total_events};wall_s={total_wall:.1f};"
+        f"cells={n_cells}")
+
+
 def roofline():
     from repro.launch.roofline import load_table
     try:
@@ -943,8 +1068,11 @@ def roofline():
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
             cluster_hetero, cluster_slo, cluster_preempt,
-            cluster_spot_market, cluster_chaos, engine_throughput,
-            engine_churn, roofline]
+            cluster_spot_market, cluster_chaos, cluster_matrix,
+            engine_throughput, engine_churn, roofline]
+
+# sections whose --json artifact keeps a historical filename
+_JSON_NAME = {"cluster_matrix": "BENCH_matrix.json"}
 
 
 def main() -> None:
@@ -982,7 +1110,8 @@ def main() -> None:
         elapsed = time.perf_counter() - t0
         print(f"# section {fn.__name__} took {elapsed:.1f}s", flush=True)
         if args.json:
-            path = os.path.join(_REPO_ROOT, f"BENCH_{fn.__name__}.json")
+            path = os.path.join(_REPO_ROOT, _JSON_NAME.get(
+                fn.__name__, f"BENCH_{fn.__name__}.json"))
             with open(path, "w") as fh:
                 json.dump({"scenario": fn.__name__,
                            "quick": args.quick,

@@ -97,7 +97,11 @@ class ServingCluster:
                  checkpoint: Optional[CheckpointPolicy] = None,
                  health: Optional[FailureDetector] = None,
                  straggler: Optional[StragglerPolicy] = None,
-                 contention_stage_s: float = 1.0):
+                 contention_stage_s: float = 1.0,
+                 engine=None, journal: bool = True,
+                 retain_traces: bool = True,
+                 timeline_cap: Optional[int] = None,
+                 dispatch_coalesce: float = 0.0):
         if admission not in ("fifo", "priority"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cfg = cfg
@@ -117,14 +121,28 @@ class ServingCluster:
         self.prefill_mode = prefill_mode
         self.dt = dt                  # control-plane evaluation interval
         self.seed = seed
+        # million-request knobs: engine="sim" swaps every replica's
+        # ServingEngine for the token-accounting SimEngine twin;
+        # journal=False keeps only the loop's CRC digest; retain_traces=
+        # False streams request metrics into bounded aggregates;
+        # timeline_cap bounds the human-readable event log; and
+        # dispatch_coalesce>0 batches all arrivals within that window
+        # into ONE router pass (0.0 = the historical per-timestamp
+        # coalescing, bit-identical to old behaviour)
+        if engine == "sim":
+            from repro.serving.simengine import SimEngine
+            engine = SimEngine
+        self.engine_cls = engine
+        self.timeline_cap = timeline_cap
+        self.dispatch_coalesce = float(dispatch_coalesce)
         self.clock = VirtualClock()
-        self.loop = EventLoop(self.clock)
+        self.loop = EventLoop(self.clock, journal=journal)
         self.store = InMemoryStore()
         self.monitor = RateMonitor(len(fleet))
         self.router = router if router is not None else RateAwareRouter()
         self.faults = trace if trace is not None else FaultTrace(
             rebalance_lead=rebalance_lead, notice_deadline=notice_deadline)
-        self.metrics = ClusterMetrics()
+        self.metrics = ClusterMetrics(retain_traces=retain_traces)
         # spot-market mode: every launch becomes a priced purchase on
         # the exchange; the sampled interruption time (a function of the
         # market bought) drives the SAME FaultTrace transport as
@@ -166,6 +184,7 @@ class ServingCluster:
         self.loop.register("unit_land", self._on_unit_land)
         self.faults.bind(self.loop, kind="spot")
         self.replicas: List[Replica] = []
+        self._by_rid: Dict[int, Replica] = {}
         for itype in fleet:
             self.launch(itype, ready_at=0.0)
         # the control plane: three policy seams over one read-only view.
@@ -220,8 +239,10 @@ class ServingCluster:
                       decode_block=self.decode_block,
                       prefill_mode=self.prefill_mode,
                       monitor=self.monitor, store=self.store,
-                      ready_at=ready_at, seed=self.seed)
+                      ready_at=ready_at, seed=self.seed,
+                      engine_cls=self.engine_cls)
         self.replicas.append(rep)
+        self._by_rid[rid] = rep
         t_buy = at if at is not None else ready_at
         self.metrics.on_launch(rid, itype.name, model_id=itype.model_id,
                                cost_per_hour=itype.cost_per_hour, t=t_buy)
@@ -243,10 +264,7 @@ class ServingCluster:
         self.metrics.on_terminate(rep.rid, now)
 
     def replica_by_rid(self, rid: int) -> Optional[Replica]:
-        for r in self.replicas:
-            if r.rid == rid:
-                return r
-        return None
+        return self._by_rid.get(rid)
 
     def rates(self) -> Dict[int, float]:
         """Measured, normalized rates keyed by replica id."""
@@ -306,7 +324,9 @@ class ServingCluster:
         return all_placed
 
     def log(self, t: float, msg: str):
-        self.timeline.append((t, msg))
+        if (self.timeline_cap is None
+                or len(self.timeline) < self.timeline_cap):
+            self.timeline.append((t, msg))
 
     # ------------------------------------------------------------- input
     def submit(self, req: Request, at: float = 0.0):
@@ -361,9 +381,11 @@ class ServingCluster:
             self._schedule_next_arrival(source)
         # coalesce: N same-timestamp arrivals (batch submission) trigger
         # ONE router pass, after the last of them — not N full
-        # greedy_refine re-placements
+        # greedy_refine re-placements.  dispatch_coalesce > 0 widens the
+        # window: all arrivals within it share one router pass
         if self._dispatch_ev is None:
-            self._dispatch_ev = self.loop.schedule(t, "dispatch")
+            self._dispatch_ev = self.loop.schedule(
+                t + self.dispatch_coalesce, "dispatch")
 
     def _on_dispatch(self, ev, t: float):
         nxt = self.loop.peek()
@@ -839,9 +861,14 @@ class ServingCluster:
                           f"r{src.rid} -> r{dst.rid}")
             self._kick(dst, now)
 
-    def run(self, *, max_time: float = 100_000.0) -> Dict[str, float]:
-        """Dispatch events until the loop drains (or ``max_time``)."""
-        self.loop.run(until=max_time)
+    def run(self, *, max_time: float = 100_000.0,
+            max_events: int = 10_000_000) -> Dict[str, float]:
+        """Dispatch events until the loop drains (or ``max_time``).
+
+        Exhausting ``max_events`` with live work still due raises
+        (loop-level): a truncated sim must not report partial metrics
+        as if complete."""
+        self.loop.run(until=max_time, max_events=max_events)
         # endpoint retry accounting lives on the endpoints themselves;
         # fold it into the fleet summary once the run is over
         self.metrics.endpoint_retries = sum(

@@ -118,12 +118,29 @@ class ClusterView:
     def prefill_discount(self) -> float:
         return getattr(self._cl.router, "prefill_discount", 1.0)
 
+    def queued_tokens(self, model_id: str) -> float:
+        """Token-units in the router queue for a pool — O(1) via the
+        router's incremental aggregate (falls back to a scan for
+        routers that don't maintain one)."""
+        fn = getattr(self._cl.router, "queued_tokens", None)
+        if fn is not None:
+            return fn(model_id)
+        return sum(q.total_tokens for q in self.queued(model_id))
+
+    def queued_cost(self, model_id: str) -> float:
+        """Discounted router load queued for a pool — O(1), as above."""
+        fn = getattr(self._cl.router, "queued_cost", None)
+        if fn is not None:
+            return fn(model_id)
+        return sum(request_cost(q, self.prefill_discount)
+                   for q in self.queued(model_id))
+
     def pool_backlog(self, model_id: str) -> float:
         """Pending token-units across the pool: in-engine + routed +
         held + paused (paused work is still owed service)."""
         backlog = sum(r.backlog_tokens()
                       for r in self.pool(model_id, "serving"))
-        backlog += sum(q.total_tokens for q in self.queued(model_id))
+        backlog += self.queued_tokens(model_id)
         backlog += sum(q.total_tokens for q in self.held(model_id))
         backlog += sum(u.remaining_tokens for u in self.paused(model_id))
         return backlog
@@ -242,9 +259,8 @@ class PreemptionPolicy:
         pool = view.pool(model_id)
         if not pool:
             return False
-        d = view.prefill_discount
         backlog = sum(r.engine.backlog_tokens() for r in pool)
-        backlog += sum(request_cost(q, d) for q in view.queued(model_id))
+        backlog += view.queued_cost(model_id)
         return backlog / len(pool) < self.batch_admit_headroom
 
     def hold(self, req: Request, view: ClusterView) -> bool:

@@ -10,11 +10,57 @@ here for back-compat).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.runtime import VirtualClock  # noqa: F401  (re-export)
+
+
+class _LatencyHist:
+    """Log-spaced latency histogram: O(1)-memory approximate percentiles
+    for streaming (``retain_traces=False``) runs.  320 geometric buckets
+    over [1e-4, 1e6] virtual seconds give ~7.5% relative resolution —
+    plenty for a p99 floor — without holding one latency per request."""
+
+    _EDGES = np.geomspace(1e-4, 1e6, 321)
+
+    def __init__(self):
+        self.counts = np.zeros(self._EDGES.size + 1, dtype=np.int64)
+        self.n = 0
+        self.max_seen = 0.0
+
+    def add(self, lat: float):
+        self.counts[int(np.searchsorted(self._EDGES, lat))] += 1
+        self.n += 1
+        if lat > self.max_seen:
+            self.max_seen = lat
+
+    def percentile(self, q: float) -> float:
+        if self.n == 0:
+            return 0.0
+        target = q / 100.0 * self.n
+        cum = 0
+        for idx in range(self.counts.size):
+            cum += int(self.counts[idx])
+            if cum >= target:
+                if idx == 0:
+                    return float(min(self._EDGES[0], self.max_seen))
+                if idx >= self._EDGES.size:
+                    return self.max_seen
+                # geometric bucket midpoint
+                return float(np.sqrt(self._EDGES[idx - 1]
+                                     * self._EDGES[idx]))
+        return self.max_seen
+
+
+@dataclasses.dataclass
+class _ClassAgg:
+    """Streaming per-(SLO, pool) completion aggregate."""
+    completed: int = 0
+    met: int = 0                 # completed at or before the deadline
+    finite_misses: int = 0       # completed late against a finite deadline
+    tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -76,8 +122,33 @@ class DrainRecord:
 
 
 class ClusterMetrics:
-    def __init__(self):
+    """Fleet observability.
+
+    Two retention modes:
+
+    * ``retain_traces=True`` (default): one ``RequestTrace`` per request
+      for the whole run — exact percentiles, windowed attainment.
+    * ``retain_traces=False`` (million-request runs): only *live*
+      requests hold a trace; completions fold into per-(SLO, pool)
+      counters and log-spaced latency histograms, so memory is bounded
+      by the number of in-flight requests, not the request count.
+      Percentiles become histogram-approximate (~7.5% relative) and
+      ``class_attainment``'s ``since``/``until`` window only scopes the
+      still-live population (completed requests aggregate globally).
+    """
+
+    def __init__(self, retain_traces: bool = True):
+        self.retain_traces = retain_traces
         self.traces: Dict[int, RequestTrace] = {}
+        # streaming aggregates (only fed when retain_traces=False)
+        self._classes: Set[str] = set()
+        self._submitted = 0
+        self._done_count = 0
+        self._done_tokens = 0
+        self._max_done_t = 0.0
+        self._hist = _LatencyHist()
+        self._slo_hist: Dict[str, _LatencyHist] = {}
+        self._agg: Dict[Tuple[str, str], _ClassAgg] = {}
         self.replicas: Dict[int, ReplicaStats] = {}
         self.drains: List[DrainRecord] = []
         self.rebalance_migrations = 0    # mid-stream (load) slot moves
@@ -117,6 +188,8 @@ class ClusterMetrics:
     def on_submit(self, rid: int, now: float, *, slo: str = "standard",
                   deadline_t: float = float("inf"),
                   model_id: str = "default"):
+        self._submitted += 1
+        self._classes.add(slo)
         self.traces[rid] = RequestTrace(rid, now, slo=slo,
                                         deadline_t=deadline_t,
                                         model_id=model_id)
@@ -125,6 +198,25 @@ class ClusterMetrics:
         tr = self.traces[rid]
         tr.done_t = now
         tr.tokens = tokens
+        if self.retain_traces:
+            return
+        # streaming: fold the completion into the aggregates and drop
+        # the trace — memory stays bounded by in-flight requests
+        self._done_count += 1
+        self._done_tokens += tokens
+        if now > self._max_done_t:
+            self._max_done_t = now
+        lat = now - tr.arrival_t
+        self._hist.add(lat)
+        self._slo_hist.setdefault(tr.slo, _LatencyHist()).add(lat)
+        agg = self._agg.setdefault((tr.slo, tr.model_id), _ClassAgg())
+        agg.completed += 1
+        agg.tokens += tokens
+        if tr.met_deadline:
+            agg.met += 1
+        elif np.isfinite(tr.deadline_t):
+            agg.finite_misses += 1
+        del self.traces[rid]
 
     def on_migration(self, rid: int):
         if rid in self.traces:
@@ -225,12 +317,26 @@ class ClusterMetrics:
         pop = [t for t in self.traces.values()
                if t.slo == slo and since <= t.arrival_t <= until
                and (model_id is None or t.model_id == model_id)]
-        if not pop:
+        if self.retain_traces:
+            if not pop:
+                return None
+            return sum(t.met_deadline for t in pop) / len(pop)
+        # streaming: completed requests live only in the aggregates,
+        # which carry no arrival time — the window scopes just the
+        # still-live population (all live requests count as misses)
+        completed = met = 0
+        for (s, m), agg in self._agg.items():
+            if s == slo and (model_id is None or m == model_id):
+                completed += agg.completed
+                met += agg.met
+        if completed + len(pop) == 0:
             return None
-        return sum(t.met_deadline for t in pop) / len(pop)
+        return met / (completed + len(pop))
 
     def slo_classes(self) -> List[str]:
-        return sorted({t.slo for t in self.traces.values()})
+        if self.retain_traces:
+            return sorted({t.slo for t in self.traces.values()})
+        return sorted(self._classes)
 
     def overdue(self, now: float,
                 model_id: Optional[str] = None) -> Dict[str, int]:
@@ -249,30 +355,45 @@ class ClusterMetrics:
         return out
 
     def summary(self, now: float) -> Dict[str, float]:
-        lat = self.latencies()
         total_tokens = sum(s.tokens for s in self.replicas.values())
-        done = int(sum(t.done_t is not None for t in self.traces.values()))
         # horizon = last request completion, NOT the loop's last event —
         # trailing bookkeeping events (a pre-warmed replica coming up, a
         # stale step) must not dilute or equalize throughput.  tok_per_s
         # pairs that horizon with the tokens of *completed* requests so a
         # max_time-truncated run can't overstate throughput (on a fully
         # drained run the two token counts coincide).
-        done_ts = [t.done_t for t in self.traces.values()
-                   if t.done_t is not None]
-        done_tokens = sum(t.tokens for t in self.traces.values()
-                          if t.done_t is not None)
-        now = max(done_ts) if done_ts else now
+        if self.retain_traces:
+            lat = self.latencies()
+            done = int(sum(t.done_t is not None
+                           for t in self.traces.values()))
+            done_ts = [t.done_t for t in self.traces.values()
+                       if t.done_t is not None]
+            done_tokens = sum(t.tokens for t in self.traces.values()
+                              if t.done_t is not None)
+            now = max(done_ts) if done_ts else now
+            submitted = len(self.traces)
+            p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
+            p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
+            lat_max = float(lat.max()) if lat.size else 0.0
+        else:
+            done = self._done_count
+            done_tokens = self._done_tokens
+            submitted = self._submitted
+            if done:
+                now = self._max_done_t
+            p50 = self._hist.percentile(50)
+            p99 = self._hist.percentile(99)
+            lat_max = self._hist.max_seen
         out = {
             "virtual_seconds": now,
-            "submitted": len(self.traces),
+            "submitted": submitted,
             "completed": done,
-            "dropped": len(self.traces) - done,
+            "dropped": submitted - done,
             "total_tokens": total_tokens,
             "tok_per_s": done_tokens / max(now, 1e-9),
-            "p50_latency": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "p99_latency": float(np.percentile(lat, 99)) if lat.size else 0.0,
-            "max_latency": float(lat.max()) if lat.size else 0.0,
+            "p50_latency": p50,
+            "p99_latency": p99,
+            "max_latency": lat_max,
             "migrated_slots": sum(d.slots_migrated for d in self.drains),
             "drains": len(self.drains),
             "rebalance_migrations": self.rebalance_migrations,
@@ -320,15 +441,25 @@ class ClusterMetrics:
         for slo in self.slo_classes():
             if slo == "standard" and len(self.slo_classes()) == 1:
                 break
-            lat = self.latencies(slo)
             att = self.class_attainment(slo)
             out[f"attainment_{slo}"] = att if att is not None else 1.0
-            out[f"p99_latency_{slo}"] = (float(np.percentile(lat, 99))
-                                         if lat.size else 0.0)
-            out[f"misses_{slo}"] = int(sum(
-                t.slo == slo and not t.met_deadline
-                and np.isfinite(t.deadline_t)
-                for t in self.traces.values()))
+            if self.retain_traces:
+                lat = self.latencies(slo)
+                out[f"p99_latency_{slo}"] = (float(np.percentile(lat, 99))
+                                             if lat.size else 0.0)
+                out[f"misses_{slo}"] = int(sum(
+                    t.slo == slo and not t.met_deadline
+                    and np.isfinite(t.deadline_t)
+                    for t in self.traces.values()))
+            else:
+                h = self._slo_hist.get(slo)
+                out[f"p99_latency_{slo}"] = h.percentile(99) if h else 0.0
+                fmiss = sum(agg.finite_misses
+                            for (s, _), agg in self._agg.items()
+                            if s == slo)
+                live_miss = sum(t.slo == slo and np.isfinite(t.deadline_t)
+                                for t in self.traces.values())
+                out[f"misses_{slo}"] = int(fmiss + live_miss)
         # market mode: savings vs all-on-demand + by-market/by-strategy
         # breakdowns, billed through the same completion horizon as
         # fleet_dollar_cost (which keeps its static-rate semantics)

@@ -68,6 +68,14 @@ class ReplicaState(enum.Enum):
 
 
 class Replica:
+    # class-level routability epoch: bumped by ANY replica's state or
+    # quarantine transition (and by construction, i.e. fleet growth), so
+    # routers can cache their admitting-replicas-by-pool index and only
+    # rebuild it when membership could actually have changed.
+    # Over-invalidation (e.g. RUNNING -> AT_RISK on a replica in another
+    # pool) is harmless — the cache is just rebuilt.
+    topology_epoch = 0
+
     def __init__(self, rid: int, cfg: ModelConfig, params,
                  itype: InstanceType, *, batch_size: int = 2,
                  max_seq: int = 64, temperature: float = 0.0,
@@ -76,20 +84,24 @@ class Replica:
                  ready_at: float = 0.0, seed: int = 0,
                  decode_block: int = 4, prefill_mode: str = "chunked",
                  endpoint: Optional[MigrationEndpoint] = None,
-                 engine_kwargs: Optional[dict] = None):
+                 engine_kwargs: Optional[dict] = None,
+                 engine_cls=None):
         self.rid = rid
         self.itype = itype
         self.decode_block = max(int(decode_block), 1)
         # engine_kwargs passes cache tuning straight through (e.g.
         # cache_mode="paged", block_size, kv_pool_blocks) without the
-        # replica layer growing one parameter per engine knob
-        self.engine = ServingEngine(cfg, params, batch_size=batch_size,
-                                    max_seq=max_seq,
-                                    temperature=temperature,
-                                    seed=seed + rid,
-                                    prefill_mode=prefill_mode,
-                                    decode_block=self.decode_block,
-                                    **(engine_kwargs or {}))
+        # replica layer growing one parameter per engine knob;
+        # engine_cls swaps the whole engine (e.g. the token-accounting
+        # SimEngine for million-request matrix runs)
+        engine_cls = engine_cls or ServingEngine
+        self.engine = engine_cls(cfg, params, batch_size=batch_size,
+                                 max_seq=max_seq,
+                                 temperature=temperature,
+                                 seed=seed + rid,
+                                 prefill_mode=prefill_mode,
+                                 decode_block=self.decode_block,
+                                 **(engine_kwargs or {}))
         self.monitor = monitor
         self.store = store or InMemoryStore()
         # migration staging: accelerator hosts keep the round trip
@@ -123,6 +135,24 @@ class Replica:
         self.lost: Optional[Dict[str, list]] = None
 
     # ------------------------------------------------------------- status
+    @property
+    def state(self) -> ReplicaState:
+        return self._state
+
+    @state.setter
+    def state(self, value: ReplicaState):
+        self._state = value
+        Replica.topology_epoch += 1
+
+    @property
+    def quarantined(self) -> bool:
+        return self._quarantined
+
+    @quarantined.setter
+    def quarantined(self, value: bool):
+        self._quarantined = bool(value)
+        Replica.topology_epoch += 1
+
     @property
     def model_id(self) -> str:
         return self.itype.model_id

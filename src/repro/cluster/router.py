@@ -25,12 +25,28 @@ Every router is **model-aware**: replicas declare a ``model_id`` (their
 ``InstanceType``'s pool) and a request is only ever placed on a replica
 serving its model; requests whose pool currently has no admitting
 replica stay queued until one appears.
+
+Built for million-request runs:
+
+* the admission queue is a ``collections.deque`` — ``submit`` appends
+  and ``requeue`` extends the front in O(len(reqs)), instead of the old
+  O(queue) wholesale list rebuild per drain (O(queue²) once thousands
+  of lazily-admitted batch requests are held);
+* the admitting-replicas-by-pool index is cached on the fleet's
+  ``topology_epoch`` (bumped by any replica state/quarantine change)
+  instead of being rebuilt on every dispatch;
+* ``place_cap`` (opt-in) bounds one placement round: when the queue is
+  longer than the cap, the head of the queue is placed FIFO onto free
+  slots in O(cap x replicas) and the rest stays queued — the full
+  GreedyRefine pass over an unbounded backlog is what made toy-scale
+  routers melt at 10^6 requests.
 """
 
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -63,14 +79,66 @@ class Router(PlacementPolicy):
     name = "base"
 
     def __init__(self):
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
+        self._pool_cache: Optional[Tuple[Tuple[int, int],
+                                         Dict[str, List[Replica]]]] = None
+        # incremental per-pool load aggregates over the queue: the
+        # control plane's headroom/backlog checks read these in O(1)
+        # instead of scanning the (possibly million-deep) queue per
+        # control tick.  Maintained at every queue mutation site below;
+        # tiny float drift from add/remove cycles is clamped at read.
+        self._q_tokens: Dict[str, float] = {}
+        self._q_cost: Dict[str, float] = {}
+
+    def _q_add(self, req: Request):
+        m = req.model_id
+        self._q_tokens[m] = self._q_tokens.get(m, 0.0) + req.total_tokens
+        self._q_cost[m] = self._q_cost.get(m, 0.0) + request_cost(
+            req, getattr(self, "prefill_discount", 1.0))
+
+    def _q_rem(self, req: Request):
+        m = req.model_id
+        self._q_tokens[m] = self._q_tokens.get(m, 0.0) - req.total_tokens
+        self._q_cost[m] = self._q_cost.get(m, 0.0) - request_cost(
+            req, getattr(self, "prefill_discount", 1.0))
+
+    def queued_tokens(self, model_id: Optional[str] = None) -> float:
+        """Token-units queued for ``model_id`` (all pools when None)."""
+        if model_id is None:
+            return max(0.0, sum(self._q_tokens.values()))
+        return max(0.0, self._q_tokens.get(model_id, 0.0))
+
+    def queued_cost(self, model_id: Optional[str] = None) -> float:
+        """Discounted router load queued for ``model_id``."""
+        if model_id is None:
+            return max(0.0, sum(self._q_cost.values()))
+        return max(0.0, self._q_cost.get(model_id, 0.0))
 
     def submit(self, req: Request):
+        self._q_add(req)
         self.queue.append(req)
 
     def requeue(self, reqs: Sequence[Request]):
-        """Drained (checkpoint-free) requests come back to the front."""
-        self.queue = list(reqs) + self.queue
+        """Drained (checkpoint-free) requests come back to the front,
+        keeping their relative order (O(len(reqs)), not O(queue))."""
+        reqs = list(reqs)
+        for req in reqs:
+            self._q_add(req)
+        self.queue.extendleft(reversed(reqs))
+
+    def pools(self, replicas: Sequence[Replica]) -> Dict[str, List[Replica]]:
+        """Admitting replicas by pool, cached on the fleet's topology
+        epoch: any replica state/quarantine flip (and every launch)
+        bumps ``Replica.topology_epoch``, so the index is rebuilt only
+        when membership could actually have changed — not per dispatch.
+        """
+        key = (Replica.topology_epoch, len(replicas))
+        cached = self._pool_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        pools = _pools(replicas)
+        self._pool_cache = (key, pools)
+        return pools
 
     def place(self, view: ClusterView, now: float) -> List[Replica]:
         return self.dispatch(list(view.replicas), view.rates(), now)
@@ -93,14 +161,17 @@ class RoundRobinRouter(Router):
 
     def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
                  now: float = 0.0) -> List[Replica]:
-        pools = _pools(replicas)
+        pools = self.pools(replicas)
         if not pools or not self.queue:
             return []
         touched: List[Replica] = []
-        leftover: List[Request] = []
-        for req in self.queue:
+        leftover: Deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            self._q_rem(req)
             targets = pools.get(req.model_id)
             if not targets:
+                self._q_add(req)
                 leftover.append(req)     # no admitting replica for pool
                 continue
             n = self._next.get(req.model_id, 0)
@@ -119,13 +190,18 @@ class RateAwareRouter(Router):
     name = "rate_aware"
 
     def __init__(self, tolerance: float = 1.05,
-                 prefill_discount: float = DEFAULT_PREFILL_DISCOUNT):
+                 prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
+                 place_cap: Optional[int] = None):
         super().__init__()
         self.tolerance = tolerance
         # request load weights prompt tokens at the bulk-prefill discount
         # (matching ServingEngine.backlog_tokens), so prompt-heavy
         # requests don't overstate the load they will place on a replica
         self.prefill_discount = prefill_discount
+        # opt-in backlog bound: over the cap, one placement round places
+        # only the queue head onto free slots (O(cap x replicas)) and
+        # skips the reclaim + GreedyRefine pass; None = exact behaviour
+        self.place_cap = place_cap
 
     # ------------------------------------------------------------ hooks
     def _order_pending(self, pending: List[Request]) -> List[Request]:
@@ -142,9 +218,15 @@ class RateAwareRouter(Router):
     # --------------------------------------------------------- dispatch
     def dispatch(self, replicas: List[Replica], rates: Dict[int, float],
                  now: float = 0.0) -> List[Replica]:
-        pools = _pools(replicas)
+        pools = self.pools(replicas)
         if not pools:
             return []
+        if self.place_cap is not None:
+            # bounded mode: never reclaim + re-place the whole backlog —
+            # the queue head fills free slots and the rest STAYS in the
+            # router deque (engines hold only running work), so one pass
+            # is O(cap x replicas) regardless of backlog depth
+            return self._fast_place(pools)
         # reclaim queued-but-unadmitted work so placement can be revised
         pending_by_model: Dict[str, List[Request]] = {}
         prev_home: Dict[int, int] = {}
@@ -153,9 +235,11 @@ class RateAwareRouter(Router):
                 for req in rep.engine.reclaim_queue():
                     prev_home[req.rid] = pe
                     pending_by_model.setdefault(model_id, []).append(req)
-        leftover: List[Request] = []
-        for req in self.queue:
+        leftover: Deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
             if req.model_id in pools:
+                self._q_rem(req)
                 pending_by_model.setdefault(req.model_id, []).append(req)
             else:
                 leftover.append(req)
@@ -170,6 +254,47 @@ class RateAwareRouter(Router):
                                         prev_home, now):
                 if rep not in touched:
                     touched.append(rep)
+        return touched
+
+    def _fast_place(self, pools: Dict[str, List[Replica]]) -> List[Replica]:
+        """Backlog fast path: admit the FIFO head of the queue onto free
+        slots only, leaving the rest queued (the deque holds the backlog
+        in O(1) memory per request instead of engine queues growing
+        unboundedly).  Each completion-driven dispatch pass admits the
+        next head, so admission order is identical to the exact path's
+        FIFO order — only the placement refinement is skipped."""
+        touched: List[Replica] = []
+        leftover: Deque[Request] = deque()
+        free: Dict[int, int] = {}
+        scanned = 0
+        while self.queue and scanned < self.place_cap:
+            scanned += 1
+            req = self.queue.popleft()
+            targets = pools.get(req.model_id)
+            if not targets:
+                leftover.append(req)
+                continue
+            best = None
+            for rep in targets:
+                f = free.get(rep.rid)
+                if f is None:
+                    # headroom = free lanes minus work already waiting
+                    # to admit into them (placed this timestamp but not
+                    # yet stepped): keeps engine queues ~empty so their
+                    # backlog scans stay O(active slots)
+                    f = free[rep.rid] = (rep.engine.free_slots
+                                         - rep.engine.n_queued)
+                if f > 0 and (best is None or f > free[best.rid]):
+                    best = rep
+            if best is None:
+                leftover.append(req)   # pool full: wait for completions
+                continue
+            free[best.rid] -= 1
+            self._q_rem(req)
+            best.submit(req)
+            if best not in touched:
+                touched.append(best)
+        self.queue.extendleft(reversed(leftover))
         return touched
 
     def _place_pool(self, targets: List[Replica], pending: List[Request],
@@ -233,8 +358,9 @@ class DeadlineAwareRouter(RateAwareRouter):
 
     def __init__(self, tolerance: float = 1.05,
                  prefill_discount: float = DEFAULT_PREFILL_DISCOUNT,
-                 max_repairs: int = 32):
-        super().__init__(tolerance, prefill_discount)
+                 max_repairs: int = 32,
+                 place_cap: Optional[int] = None):
+        super().__init__(tolerance, prefill_discount, place_cap=place_cap)
         self.max_repairs = max_repairs
 
     def _order_pending(self, pending: List[Request]) -> List[Request]:

@@ -1,0 +1,163 @@
+"""Behaviour-shaped arrival generators (serving/shapes.py): seeded
+determinism, stream invariants, per-segment rate fidelity, and the
+reduced scenario-matrix smoke with bit-identical event journals.
+
+The acceptance bar for the million-request load library:
+  * same seed -> bit-identical (t, rid, prompt, max_new) streams, and
+    the stream is re-iterable (it is a generator recipe, not a spent
+    iterator);
+  * timestamps never decrease, exactly ``n`` requests are produced,
+    rids are sequential from ``start_rid``;
+  * empirical per-segment arrival counts track each shape's nominal
+    ``segments()`` rate profile (Poisson tolerance);
+  * the reduced matrix cell drives the REAL cluster twice to the same
+    ``journal_digest`` and summary, with the digest independent of
+    whether the full journal is retained.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import InstanceType, RateAwareRouter, ServingCluster
+from repro.serving.shapes import SHAPES, ShapedArrivals, make_shape
+
+ALL_SHAPES = sorted(SHAPES)
+
+
+def _stream(name, n=400, rate=8.0, period=40.0, seed=5):
+    return make_shape(name, n, rate=rate, period=period, seed=seed)
+
+
+def _key(t, req):
+    return (t, req.rid, req.prompt.tobytes(), req.max_new_tokens,
+            req.slo.name, req.model_id)
+
+
+# ------------------------------------------------------------ determinism
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_same_seed_bit_identical_stream(name):
+    a = [_key(t, r) for t, r in _stream(name)]
+    b = [_key(t, r) for t, r in _stream(name)]
+    assert a == b
+
+
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_reiterable_not_a_spent_iterator(name):
+    shape = _stream(name, n=50)
+    assert [t for t, _ in shape] == [t for t, _ in shape]
+
+
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_different_seed_different_stream(name):
+    a = [t for t, _ in _stream(name, seed=5)]
+    b = [t for t, _ in _stream(name, seed=6)]
+    assert a != b
+
+
+# ------------------------------------------------------- stream invariants
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_monotone_count_and_rids(name):
+    pairs = list(_stream(name))
+    assert len(pairs) == 400
+    ts = [t for t, _ in pairs]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    assert ts[0] >= 0.0
+    assert [r.rid for _, r in pairs] == list(range(400))
+
+
+def test_start_rid_offsets_the_stream():
+    shape = make_shape("sawtooth", 10, rate=5.0, seed=1)
+    shape.start_rid = 700
+    assert [r.rid for _, r in shape] == list(range(700, 710))
+
+
+def test_rate_max_is_an_envelope():
+    for name in ALL_SHAPES:
+        shape = _stream(name, n=1)
+        ts = np.linspace(0.0, 200.0, 4001)
+        assert max(shape.rate(float(t)) for t in ts) <= shape.rate_max + 1e-9
+
+
+# --------------------------------------------------- segment rate fidelity
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_per_segment_empirical_rate(name):
+    """Pool same-rate segments of the nominal profile and hold the
+    empirical arrival count to the Poisson expectation (5 sigma)."""
+    n, rate = 4000, 20.0
+    pairs = list(_stream(name, n=n, rate=rate, period=40.0, seed=9))
+    ts = np.asarray([t for t, _ in pairs])
+    until = float(ts[-1]) + 1e-9
+    pooled = {}  # rounded nominal rate -> [duration, observed]
+    profile = _stream(name, n=1, rate=rate, period=40.0)
+    for start, end, seg_rate in profile.segments(until):
+        key = round(seg_rate, 6)
+        dur = end - start
+        obs = int(np.sum((ts >= start) & (ts < end)))
+        acc = pooled.setdefault(key, [0.0, 0])
+        acc[0] += dur
+        acc[1] += obs
+    assert sum(o for _, o in pooled.values()) == n
+    for seg_rate, (dur, obs) in pooled.items():
+        exp = seg_rate * dur
+        assert abs(obs - exp) <= 5.0 * np.sqrt(exp) + 1.0, (
+            f"{name}: pooled rate {seg_rate}: observed {obs} vs "
+            f"expected {exp:.1f} over {dur:.1f}s")
+
+
+@pytest.mark.parametrize("name", ALL_SHAPES)
+def test_long_run_mean_tracks_target_rate(name):
+    n, rate = 4000, 20.0
+    ts = [t for t, _ in _stream(name, n=n, rate=rate, period=40.0, seed=2)]
+    assert ts[-1] == pytest.approx(n / rate, rel=0.12)
+
+
+def test_make_shape_unknown_name():
+    with pytest.raises(ValueError, match="unknown shape"):
+        make_shape("nope", 10, rate=1.0)
+
+
+def test_base_class_is_abstract():
+    shape = ShapedArrivals(3)
+    with pytest.raises(NotImplementedError):
+        shape.rate(0.0)
+
+
+# --------------------------------------------- reduced matrix cell smoke
+def _matrix_cell(journal=True, retain_traces=True, seed=3):
+    fleet = [InstanceType("std.1x", 4.0, spot=False) for _ in range(2)]
+    cl = ServingCluster(None, None, fleet, engine="sim",
+                        router=RateAwareRouter(place_cap=16),
+                        batch_size=8, max_seq=64, decode_block=4,
+                        seed=0, journal=journal,
+                        retain_traces=retain_traces)
+    cl.attach_arrivals(make_shape("pulse_spikes", 80, rate=1.5,
+                                  period=30.0, seed=seed))
+    summary = cl.run(max_time=50_000.0)
+    return cl, summary
+
+
+def test_matrix_cell_journal_bit_identical_across_runs():
+    cl1, s1 = _matrix_cell()
+    cl2, s2 = _matrix_cell()
+    assert cl1.loop.journal == cl2.loop.journal
+    assert cl1.loop.journal_digest == cl2.loop.journal_digest
+    assert s1["completed"] == s2["completed"] == 80
+    assert s1["tok_per_s"] == s2["tok_per_s"]
+    assert s1["p99_latency"] == s2["p99_latency"]
+
+
+def test_matrix_cell_digest_independent_of_journal_retention():
+    """The bounded-memory path (journal=False, streaming metrics) must
+    replay the exact same event timeline as the full-capture run."""
+    cl_full, s_full = _matrix_cell(journal=True, retain_traces=True)
+    cl_lean, s_lean = _matrix_cell(journal=False, retain_traces=False)
+    assert cl_lean.loop.journal == []
+    assert cl_lean.loop.journal_digest == cl_full.loop.journal_digest
+    assert s_lean["completed"] == s_full["completed"]
+    assert s_lean["tok_per_s"] == s_full["tok_per_s"]
+
+
+def test_streaming_metrics_keep_no_per_request_traces():
+    cl, s = _matrix_cell(retain_traces=False)
+    assert s["completed"] == 80
+    assert len(cl.metrics.traces) == 0
