@@ -23,6 +23,11 @@ Guarded figures, dispatched on the dump's ``scenario`` field:
   higher goodput than the recovery-off run (which must demonstrably
   lose work), goodput at or above ``--min-chaos-goodput``, and
   replayed-token overhead at or below ``--max-replay-frac``.
+* ``cluster_vertical`` — in-place resize + QoS must reach
+  at-least-equal interactive attainment at strictly lower fleet dollar
+  cost than the horizontal-only arm (and at or below
+  ``--max-vertical-dollars``), with both grow and shrink exercised,
+  zero lost WorkUnits, and bit-identical streams across the arms.
 * ``cluster_matrix`` (BENCH_matrix.json) — every scenario-matrix cell
   (shape x router x preemption x fleet, plus the diurnal mega-cell)
   must be populated with interactive attainment at or above
@@ -117,6 +122,20 @@ def chaos_stats(bench: dict) -> tuple:
             int(_derived(bench, row, r"lost=[0-9]+vs([0-9]+)")),
             _derived_str(bench, row, r"bit_identical=(\w+)") == "True",
             _derived(bench, row, r"replay_frac=([0-9.]+)"))
+
+
+def vertical_stats(bench: dict) -> tuple:
+    """(att_v, att_h, cost_v, cost_h, grows, shrinks, lost, identical)
+    from a cluster_vertical dump's summary row."""
+    row = "cluster_vertical_summary"
+    return (_derived(bench, row, r"attainment=([0-9.]+)vs"),
+            _derived(bench, row, r"attainment=[0-9.]+vs([0-9.]+)"),
+            _derived(bench, row, r"dollar_cost=([0-9.]+)vs"),
+            _derived(bench, row, r"dollar_cost=[0-9.]+vs([0-9.]+)"),
+            int(_derived(bench, row, r"grows=([0-9]+)")),
+            int(_derived(bench, row, r"shrinks=([0-9]+)")),
+            int(_derived(bench, row, r"lost=([0-9]+)")),
+            _derived_str(bench, row, r"identical_tokens=(\w+)") == "True")
 
 
 def matrix_cells(bench: dict) -> list:
@@ -237,6 +256,42 @@ def check(bench: dict, args) -> bool:
               f">= {args.min_chaos_goodput:.3f}, replay overhead "
               f"{replay:.3f} <= {args.max_replay_frac:.3f}")
         return True
+    if scenario == "cluster_vertical":
+        (att_v, att_h, cost_v, cost_h,
+         grows, shrinks, lost, identical) = vertical_stats(bench)
+        if lost != 0:
+            print(f"guard: FAIL — vertical resize lost {lost} "
+                  f"WorkUnit(s) (must be 0)", file=sys.stderr)
+            return False
+        if not identical:
+            print("guard: FAIL — resized streams no longer bit-identical "
+                  "to the horizontal-only reference", file=sys.stderr)
+            return False
+        if grows <= 0 or shrinks <= 0:
+            print(f"guard: FAIL — vertical arm no longer exercises both "
+                  f"directions (grows={grows}, shrinks={shrinks}): the "
+                  f"A/B is vacuous", file=sys.stderr)
+            return False
+        if att_v < att_h:
+            print(f"guard: FAIL — vertical+QoS interactive attainment "
+                  f"{att_v:.3f} fell below horizontal-only {att_h:.3f}",
+                  file=sys.stderr)
+            return False
+        if cost_v >= cost_h:
+            print(f"guard: FAIL — vertical fleet dollars {cost_v:.4f} no "
+                  f"longer strictly below horizontal {cost_h:.4f}",
+                  file=sys.stderr)
+            return False
+        if cost_v > args.max_vertical_dollars:
+            print(f"guard: FAIL — vertical fleet dollars {cost_v:.4f} "
+                  f"exceed the {args.max_vertical_dollars:.4f} ceiling",
+                  file=sys.stderr)
+            return False
+        print(f"guard: OK — vertical+QoS attainment {att_v:.3f} >= "
+              f"{att_h:.3f} at {cost_v:.4f} < {cost_h:.4f} dollars "
+              f"(ceiling {args.max_vertical_dollars:.4f}), "
+              f"{grows} grows / {shrinks} shrinks, 0 lost, bit-identical")
+        return True
     if scenario == "cluster_matrix":
         cells = matrix_cells(bench)
         # 5 shapes x 2 routers x 2 preemption x 2 fleets + 1 mega cell
@@ -301,6 +356,10 @@ def main() -> None:
     ap.add_argument("--max-replay-frac", type=float, default=0.25,
                     help="maximum replayed-token overhead as a fraction "
                          "of useful tokens (cluster_chaos dumps)")
+    ap.add_argument("--max-vertical-dollars", type=float, default=0.10,
+                    help="fleet-dollar ceiling for the vertical+QoS arm "
+                         "(cluster_vertical dumps; it must also stay "
+                         "strictly below the horizontal arm)")
     ap.add_argument("--min-cell-attainment", type=float, default=0.6,
                     help="minimum interactive attainment for EVERY "
                          "scenario-matrix cell (cluster_matrix dumps)")

@@ -487,6 +487,151 @@ def cluster_preempt(quick: bool = False):
         f"dollars {cost_on:.4f} vs {cost_off:.4f}")
 
 
+# ----------------------------------------------------- vertical elasticity
+def cluster_vertical(quick: bool = False):
+    """Vertical elasticity A/B: in-place resize + QoS vs horizontal-only.
+
+    A small fleet saturated with batch-class decodes takes an
+    interactive surge, then a quiet tail.  Both arms see the same
+    requests and the same *peak* slot capacity; they differ only in how
+    capacity appears:
+
+    * horizontal — a fixed batch width per replica; the autoscaler buys
+      up to two extra replicas on sustained backlog and pays a
+      ``replacement_latency`` before they serve (then bills them until
+      idle scale-down).
+    * vertical — the fleet is pinned, and a ``FixedThresholdVertical``
+      recommender grows each replica's lanes in place through the
+      canonical pack/unpack path (no drain, surviving slots untouched)
+      the moment backlog per lane crosses the threshold — and shrinks
+      back in the quiet tail, with ``QoSPolicy`` holding BestEffort
+      arrivals out of the Guaranteed reservation and ordering any
+      shrink evictions BestEffort-first.
+
+    Vertical must reach at-least-equal interactive attainment at
+    strictly lower fleet dollar cost, with zero lost WorkUnits and
+    bit-identical per-request streams across the arms.
+    """
+    import jax
+    from repro.cluster import DeadlineAwareRouter, InstanceType, \
+        ServingCluster
+    from repro.configs import get_config
+    from repro.models import model_zoo as zoo
+    from repro.serving.engine import Request
+    from repro.serving.workload import SLOClass
+    from repro.vertical import FixedThresholdVertical, QoSPolicy
+
+    cfg = get_config("granite-8b").reduced()
+    params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+    n_rep = 2
+    base_batch, max_batch = 2, 4
+    fleet = [InstanceType("std.1x", 1.0, spot=False, cost_per_hour=1.0)
+             for _ in range(n_rep)]
+    interactive = SLOClass("interactive", 0, deadline=26.0)
+    batch = SLOClass("batch", 2, deadline=4000.0, admit_lazily=True)
+    n_batch = 6 if quick else 8
+    n_int = 4 if quick else 6
+    surge_t = 6.0
+    decode_span = (18, 24) if quick else (28, 36)
+
+    def requests():
+        rng = np.random.default_rng(11)
+        reqs = []
+        for rid in range(n_batch):       # the batch floor at t=0
+            reqs.append((0.0, Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(6, 10)),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(*decode_span)),
+                slo=batch)))
+        for rid in range(n_batch, n_batch + n_int):   # the surge
+            reqs.append((surge_t, Request(
+                rid=rid,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    int(rng.integers(3, 6)),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(4, 7)),
+                slo=interactive)))
+        return reqs
+
+    def one_run(vertical: bool):
+        if vertical:
+            qos = QoSPolicy()
+            kw = dict(
+                vertical=FixedThresholdVertical(
+                    min_batch=base_batch, max_batch=max_batch, step=2,
+                    grow_backlog=12.0, shrink_backlog=3.0,
+                    cooldown=4.0, qos=qos),
+                qos=qos,
+                # the fleet is pinned: capacity moves only vertically
+                autoscaler_kw=dict(scale_up_backlog=1e9,
+                                   slo_scale_up=False,
+                                   max_replicas=n_rep))
+        else:
+            # equal peak capacity: up to 2 extra replicas at base_batch
+            # lanes each == n_rep replicas at max_batch lanes
+            kw = dict(
+                autoscaler_kw=dict(scale_up_backlog=12.0 * base_batch,
+                                   scale_up_patience=2.0,
+                                   replacement_latency=12.0,
+                                   max_replicas=n_rep + 2,
+                                   scale_down_idle=20.0,
+                                   slo_scale_up=True))
+        cl = ServingCluster(cfg, params, fleet,
+                            router=DeadlineAwareRouter(), dt=1.0,
+                            batch_size=base_batch, max_seq=48,
+                            decode_block=2, admission="priority", **kw)
+        reqs = requests()
+        for at, req in reqs:
+            cl.submit(req, at=at)
+        out = cl.run(max_time=10_000)
+        return cl, [r for _, r in reqs], out
+
+    results = {}
+    for tag, vertical in (("horizontal", False), ("vertical", True)):
+        cl, reqs, out = one_run(vertical)
+        results[tag] = (reqs, out)
+        row(f"cluster_vertical_{tag}_interactive", 0.0,
+            f"attainment={out['attainment_interactive']:.3f};"
+            f"p99={out['p99_latency_interactive']:.1f}s")
+        row(f"cluster_vertical_{tag}_fleet", 0.0,
+            f"dollar_cost={out['fleet_dollar_cost']:.4f};"
+            f"replicas={len(cl.replicas)};"
+            f"grows={out['vertical_grows']};"
+            f"shrinks={out['vertical_shrinks']};"
+            f"evictions={out['vertical_evictions']};"
+            f"qos_guaranteed_slot_s={out['qos_guaranteed_slot_s']:.1f};"
+            f"qos_best_effort_slot_s={out['qos_best_effort_slot_s']:.1f}")
+        assert out["dropped"] == 0, f"{tag}: dropped requests"
+        assert out["completed"] == n_batch + n_int, f"{tag}: incomplete"
+
+    (h_reqs, h), (v_reqs, v) = results["horizontal"], results["vertical"]
+    for a, b in zip(h_reqs, v_reqs):
+        assert a.out_tokens == b.out_tokens, \
+            f"req{a.rid}: vertical resize changed decoded tokens"
+    att_h, att_v = (h["attainment_interactive"],
+                    v["attainment_interactive"])
+    cost_h, cost_v = h["fleet_dollar_cost"], v["fleet_dollar_cost"]
+    wins = att_v >= att_h - 1e-9 and cost_v < cost_h - 1e-9
+    row("cluster_vertical_summary", 0.0,
+        f"vertical_beats_horizontal={wins};"
+        f"attainment={att_v:.3f}vs{att_h:.3f};"
+        f"dollar_cost={cost_v:.4f}vs{cost_h:.4f};"
+        f"grows={v['vertical_grows']};shrinks={v['vertical_shrinks']};"
+        f"evictions={v['vertical_evictions']};lost=0;"
+        f"identical_tokens=True")
+    assert v["vertical_grows"] > 0, "vertical arm never grew a replica"
+    assert v["vertical_shrinks"] > 0, \
+        "vertical arm never shrank back in the quiet tail"
+    assert h["vertical_grows"] == h["vertical_shrinks"] == 0, \
+        "horizontal arm must not resize"
+    assert wins, (
+        f"vertical+QoS did not match attainment at strictly lower cost: "
+        f"attainment {att_v:.3f} vs {att_h:.3f}, "
+        f"dollars {cost_v:.4f} vs {cost_h:.4f}")
+
+
 # ------------------------------------------------------------ spot market
 def cluster_spot_market(quick: bool = False):
     """Spot-market shopping A/B (priced markets + interruption models).
@@ -1068,7 +1213,8 @@ def roofline():
 SECTIONS = [fig2_overdecomp, fig3_loadbalance, fig5_interrupt_cpu,
             fig6_interrupt_dev, fig7_modes, fig8_endtoend, kernels,
             cluster_hetero, cluster_slo, cluster_preempt,
-            cluster_spot_market, cluster_chaos, cluster_matrix,
+            cluster_vertical, cluster_spot_market, cluster_chaos,
+            cluster_matrix,
             engine_throughput, engine_churn, roofline]
 
 # sections whose --json artifact keeps a historical filename

@@ -3,7 +3,9 @@
 Replicated ``ServingEngine``s behind a pluggable ``ControlPlane``:
 in-flight requests are migratable ``WorkUnit``s (one pack/unpack
 lifecycle), and placement, SLO-aware preemption and cost-aware elastic
-scaling are swappable policies over a read-only ``ClusterView``.
+scaling are swappable policies over a read-only ``ClusterView``; a
+``VerticalScalingPolicy`` seam adds in-place replica resize on top
+(``repro.vertical`` supplies the recommenders and QoS classes).
 Chaos faults (hard kills, stragglers, contention, endpoint failures)
 are survived through periodic ``CheckpointPolicy`` snapshots, a
 heartbeat ``FailureDetector``, and ``StragglerPolicy`` quarantine.
@@ -18,9 +20,10 @@ from repro.cluster.control import (BacklogScaling, ClusterView,
                                    ControlPlane, CostAwareScaling,
                                    MigrationPlan, PlacementPolicy,
                                    PreemptOrder, PreemptionPolicy,
-                                   PREEMPTION_POLICIES, ResumeOrder,
-                                   ScaleDecision, ScalingPolicy,
-                                   SCALING_POLICIES, SLOPreemption)
+                                   PREEMPTION_POLICIES, ResizeOrder,
+                                   ResumeOrder, ScaleDecision,
+                                   ScalingPolicy, SCALING_POLICIES,
+                                   SLOPreemption, VerticalScalingPolicy)
 from repro.cluster.endpoint import (DeviceEndpoint, EndpointUnavailable,
                                     ENDPOINTS, HostEndpoint,
                                     MigrationEndpoint, make_endpoint)

@@ -20,7 +20,7 @@ run.  Requests that were never checkpointed readmit from the prompt.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.serving.workunit import WorkUnit
 
@@ -39,11 +39,73 @@ class CheckpointPolicy:
     means less replayed work after a hard kill, at more (measured)
     checkpoint staging overhead — the knob the ``cluster_chaos``
     benchmark turns.
+
+    With ``adaptive=True`` the cadence self-tunes to what is at risk:
+    the cluster reports every chaos event through ``note_fault`` and
+    ``next_interval`` measures the in-flight token count, and the
+    period scales by ``1 / (1 + pressure)`` where pressure sums recent
+    faults (per ``fault_ref``) and in-flight tokens (per
+    ``tokens_ref``) — more chaos or more live work means checkpoints
+    land sooner, so less re-decode after a kill.  A fully quiet window
+    (no recent faults, nothing in flight worth protecting) relaxes the
+    period by ``quiet_relax`` instead.  Both directions are clamped to
+    ``[min_interval, max_interval]``.
     """
 
-    def __init__(self, interval: float = 15.0):
+    def __init__(self, interval: float = 15.0, *, adaptive: bool = False,
+                 min_interval: Optional[float] = None,
+                 max_interval: Optional[float] = None,
+                 fault_window: float = 60.0, fault_ref: float = 2.0,
+                 tokens_ref: float = 256.0, quiet_relax: float = 2.0):
         self.interval = float(interval)
+        self.adaptive = bool(adaptive)
+        self.min_interval = (self.interval / 4.0 if min_interval is None
+                             else float(min_interval))
+        self.max_interval = (self.interval * 4.0 if max_interval is None
+                             else float(max_interval))
+        if not self.min_interval <= self.interval <= self.max_interval:
+            raise ValueError(
+                f"need min <= interval <= max, got "
+                f"[{self.min_interval}, {self.interval}, "
+                f"{self.max_interval}]")
+        self.fault_window = float(fault_window)
+        self.fault_ref = max(float(fault_ref), 1e-9)
+        self.tokens_ref = max(float(tokens_ref), 1e-9)
+        self.quiet_relax = max(float(quiet_relax), 1.0)
+        self._fault_times: List[float] = []
         self._catalog: Dict[int, CheckpointRecord] = {}
+
+    # ------------------------------------------------- adaptive cadence
+    def note_fault(self, t: float):
+        """Record one chaos event (any kind) for the intensity signal."""
+        self._fault_times.append(t)
+
+    def _recent_faults(self, now: float) -> int:
+        cutoff = now - self.fault_window
+        self._fault_times = [t for t in self._fault_times if t >= cutoff]
+        return len(self._fault_times)
+
+    def next_interval(self, replicas, now: float) -> float:
+        """Seconds until the next checkpoint pass.
+
+        Non-adaptive policies return the fixed ``interval`` (the
+        pre-existing behaviour); adaptive ones scale it by measured
+        risk: recent chaos intensity and the token count currently in
+        flight across serving replicas (what a kill would force to
+        re-decode).
+        """
+        if not self.adaptive:
+            return self.interval
+        in_flight = sum(rep.engine.fed_tokens(slot)
+                        for rep in replicas if rep.serving
+                        for slot, _req in rep.engine.slot_requests())
+        pressure = (self._recent_faults(now) / self.fault_ref
+                    + in_flight / self.tokens_ref)
+        if pressure <= 0.0:
+            nxt = self.interval * self.quiet_relax
+        else:
+            nxt = self.interval / (1.0 + pressure)
+        return min(max(nxt, self.min_interval), self.max_interval)
 
     def take(self, rep, now: float) -> Tuple[int, float]:
         """Checkpoint ``rep``'s live slots into its endpoint store;

@@ -97,6 +97,7 @@ class ServingCluster:
                  checkpoint: Optional[CheckpointPolicy] = None,
                  health: Optional[FailureDetector] = None,
                  straggler: Optional[StragglerPolicy] = None,
+                 vertical=None, qos=None,
                  contention_stage_s: float = 1.0,
                  engine=None, journal: bool = True,
                  retain_traces: bool = True,
@@ -166,6 +167,12 @@ class ServingCluster:
         # network-contention window inflating staging/heartbeat latency
         self.checkpoint = checkpoint
         self.health = health
+        # vertical elasticity: a VerticalScalingPolicy recommends
+        # in-place replica resizes on the control tick; a QoSPolicy
+        # grades requests into Guaranteed/Burstable/BestEffort — its
+        # door gate composes with the preemption policy's (either may
+        # hold) and its evict_key orders shrink evictions
+        self.qos = qos
         self.contention_stage_s = contention_stage_s
         self._contention: Tuple[float, float] = (1.0, 0.0)  # factor, until
         self.timeline: List[Tuple[float, str]] = []
@@ -201,7 +208,8 @@ class ServingCluster:
                         PreemptionPolicy(batch_admit_headroom)),
             scaling=self.autoscaler.policy,
             fallback=self.fallback,
-            straggler=straggler)
+            straggler=straggler,
+            vertical=vertical)
         self._control_ev = None
         self._dispatch_ev = None
         self._rebalance_ev = None
@@ -370,8 +378,12 @@ class ServingCluster:
         # everyone else enters the router queue, where an SLO-aware
         # router lets interactive requests queue-jump by (priority,
         # deadline) order
-        if (self.admission == "priority" and req.slo.admit_lazily
-                and self.control.preemption.hold(req, self.view)):
+        hold = (self.admission == "priority" and req.slo.admit_lazily
+                and self.control.preemption.hold(req, self.view))
+        # QoS gate composes: BestEffort bursts into idle capacity only
+        if not hold and self.qos is not None:
+            hold = self.qos.hold(req, self.view)
+        if hold:
             self._held.append(req)
             self.log(t, f"hold req{req.rid} ({req.slo.name}: no headroom)")
         else:
@@ -416,6 +428,10 @@ class ServingCluster:
     def _on_chaos(self, notice, t: float):
         rep = self.replica_by_rid(notice.target) \
             if notice.target >= 0 else None
+        if self.checkpoint is not None:
+            # adaptive cadence input: every chaos event is a measured
+            # fault the policy may tighten the checkpoint interval for
+            self.checkpoint.note_fault(t)
         if notice.kind == "hard_kill":
             if rep is None or not rep.serving:
                 return
@@ -488,6 +504,12 @@ class ServingCluster:
         emitted = rep.step_once(t)
         self.metrics.on_tokens(rep.rid, emitted, rep.last_step_cost)
         self.metrics.on_occupancy(rep.rid, rep.engine.occupancy())
+        if self.qos is not None:
+            # slot-seconds by QoS tier: each still-occupied slot held a
+            # lane for the virtual cost of the batch just run
+            for _slot, r in rep.engine.slot_requests():
+                self.metrics.on_qos_slot(self.qos.qos_for(r.slo).name,
+                                         rep.last_step_cost)
         done = self._harvest(rep, t)
         # the batch just run occupies [t, t + last_step_cost): the next
         # step event lands after its accounted cost
@@ -515,6 +537,7 @@ class ServingCluster:
         self._control_ev = None
         self.autoscaler.tick(t)
         self._straggler_pass(t)
+        self._vertical_pass(t)
         self._dispatch(t)
 
     def _on_rebalance(self, ev, t: float):
@@ -554,7 +577,9 @@ class ServingCluster:
             return
         if rep.state is ReplicaState.DEAD:
             return   # silence — exactly the signal the detector needs
-        self.health.beat(rep.rid, t)
+        self.health.beat(rep.rid, t,
+                         progress=rep.engine.processed_tokens,
+                         busy=rep.engine.n_active > 0)
         if self._pending_work():
             # contention inflates delivery: the next beat lands late,
             # which is what pushes a tight suspect_after into false
@@ -662,6 +687,46 @@ class ServingCluster:
                 rep.quarantined = False
                 self.log(now, f"release r{rep.rid} (rate recovered)")
 
+    # ---------------------------------------------- vertical elasticity
+    def _vertical_pass(self, now: float):
+        """Execute the vertical policy's in-place resize orders.
+
+        A grow just rebuilds the replica's geometry (surviving streams
+        continue bit-identically through the canonical snapshot path);
+        a shrink may evict slots — those units park exactly like
+        preempted ones (the preemption policy's resume liveness
+        fallback guarantees they re-admit), so no WorkUnit is ever lost
+        to a resize.  Eviction order is the QoS policy's when one is
+        attached (BestEffort first)."""
+        pol = self.control.vertical
+        if pol is None:
+            return
+        evict_key = self.qos.evict_key if self.qos is not None else None
+        for order in pol.decide(self.view, now):
+            rep = self.replica_by_rid(order.rid)
+            if rep is None or not rep.serving:
+                continue
+            old_batch = rep.engine.batch
+            units, (ckpt_s, restore_s) = rep.resize(
+                batch_size=order.batch_size,
+                decode_block=order.decode_block,
+                kv_pool_blocks=order.kv_pool_blocks,
+                evict_key=evict_key)
+            self._harvest(rep, now)   # the pack poll may complete slots
+            new_batch = rep.engine.batch
+            self.metrics.on_resize(rep.rid, old_batch, new_batch,
+                                   evicted=len(units),
+                                   stage_s=ckpt_s + restore_s)
+            for u in units:
+                u.packed_t = now
+                u.record_hop(rep.rid, now, "resize")
+                self.log(now, f"evict req{u.rid} ({u.slo_name}) "
+                              f"by resize r{rep.rid}")
+            self._paused.extend(units)
+            self.log(now, f"resize r{rep.rid} {old_batch}->{new_batch} "
+                          f"lanes ({order.reason})")
+            self._kick(rep, now)
+
     def _on_unit_land(self, ev, t: float):
         """Contention-delayed unit landing (the in-transit leg of a
         migration under an inflated-staging-latency window)."""
@@ -723,7 +788,8 @@ class ServingCluster:
                 and any(r.serving and r.engine.n_active
                         for r in self.replicas)):
             self._checkpoint_ev = self.loop.schedule(
-                now + self.checkpoint.interval, "checkpoint")
+                now + self.checkpoint.next_interval(self.replicas, now),
+                "checkpoint")
 
     def _ensure_health(self, now: float):
         """Arm heartbeat chains for live replicas that lack one and the
@@ -788,6 +854,12 @@ class ServingCluster:
             return
         admit, self._held = self.control.preemption.admit_held(
             self._held, self.view)
+        if self.qos is not None and admit:
+            # both gates must open: a request the preemption policy
+            # would admit stays held while its QoS tier has no idle
+            # capacity to burst into
+            admit, still = self.qos.admit_held(admit, self.view)
+            self._held.extend(still)
         for req in admit:
             self.router.submit(req)
             self.log(now, f"admit req{req.rid} (headroom opened)")

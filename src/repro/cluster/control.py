@@ -177,6 +177,21 @@ class ScaleDecision:
     reason: str = ""
 
 
+@dataclasses.dataclass
+class ResizeOrder:
+    """Vertically resize replica ``rid`` in place (no drain).
+
+    ``None`` fields keep the replica's current value; the cluster
+    executes the order through ``Replica.resize`` and parks any evicted
+    units for resume, so a shrink never loses work.
+    """
+    rid: int
+    batch_size: Optional[int] = None
+    decode_block: Optional[int] = None
+    kv_pool_blocks: Optional[int] = None
+    reason: str = ""
+
+
 # ---------------------------------------------------------- placement
 class PlacementPolicy:
     """Routing + mid-stream migration decisions.
@@ -587,6 +602,30 @@ class CostAwareScaling(ScalingPolicy):
 SCALING_POLICIES = {"backlog": BacklogScaling, "cost_aware": CostAwareScaling}
 
 
+# ---------------------------------------------------- vertical scaling
+class VerticalScalingPolicy:
+    """Per-replica in-place resize decisions (the Kube-DRM layer).
+
+    Horizontal scaling buys whole instances — full launch latency, full
+    ``cost_per_hour``; vertical scaling resizes a live replica's slot
+    count in place (the K8s in-place pod-resize move), so a surge can be
+    absorbed on hardware already paid for.  The base policy recommends
+    nothing; the concrete recommenders live in
+    ``repro.vertical.policy`` (fixed-threshold vs sliding-window —
+    the Kube-DRM "extreme" vs smoothed shapes) and are registered in
+    ``repro.vertical.VERTICAL_POLICIES``.
+
+    Contract: ``decide`` consumes the read-only view and returns
+    ``ResizeOrder``s; the cluster executes them, parks evicted units,
+    and meters grows/shrinks/evictions in ``ClusterMetrics``.
+    """
+
+    name = "vertical_base"
+
+    def decide(self, view: ClusterView, now: float) -> List[ResizeOrder]:
+        return []
+
+
 # -------------------------------------------------------- control plane
 @dataclasses.dataclass
 class ControlPlane:
@@ -599,9 +638,13 @@ class ControlPlane:
     ``repro.cluster.health.StragglerPolicy``): quarantine/release
     decisions over measured rates, evaluated on the control tick.
     None disables straggler mitigation.
+    ``vertical`` is the elasticity sixth seam (a
+    ``VerticalScalingPolicy``): in-place replica resize decisions,
+    evaluated on the control tick.  None disables vertical scaling.
     """
     placement: PlacementPolicy
     preemption: PreemptionPolicy
     scaling: ScalingPolicy
     fallback: Optional[object] = None
     straggler: Optional[object] = None
+    vertical: Optional[VerticalScalingPolicy] = None

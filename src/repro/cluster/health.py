@@ -24,39 +24,85 @@ Two policies the chaos model is pointed at:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 
 class FailureDetector:
-    """Suspect -> confirm dead replicas from heartbeat silence.
+    """Suspect -> confirm dead replicas from heartbeat silence, and
+    cross-check liveness against request progress.
 
-    The detector never reads replica state — only beat timestamps the
-    cluster's ``heartbeat`` handler records — so detection latency is
-    an honest function of the heartbeat/check cadence and timeouts.
+    The detector never reads replica state — only what the cluster's
+    ``heartbeat`` handler records: beat timestamps, plus (optionally)
+    the replica's cumulative processed-token counter and whether it was
+    busy at beat time — so detection latency is an honest function of
+    the heartbeat/check cadence and timeouts.
+
+    Heartbeats alone miss a *wedged* replica: one that is alive enough
+    to beat but no longer decodes (a hung device dispatch, a livelocked
+    loop).  When ``progress_stale_after`` is set, a replica whose
+    progress counter has not advanced for that long *while it was busy*
+    is suspected too — and cleared the moment a beat shows the counter
+    moving (or the replica going idle, which is healthy, not wedged).
+    Wedge staleness only suspects; confirmation stays heartbeat-based
+    (a wedged-but-beating replica is a candidate for operator action or
+    straggler quarantine, not for declaring dead and re-running its
+    work while it might still complete).
     """
 
     def __init__(self, *, heartbeat_interval: float = 3.0,
                  check_interval: float = 3.0,
                  suspect_after: float = 7.0,
-                 confirm_after: float = 14.0):
+                 confirm_after: float = 14.0,
+                 progress_stale_after: Optional[float] = None):
         if not (suspect_after < confirm_after):
             raise ValueError("suspect_after must precede confirm_after")
         self.heartbeat_interval = float(heartbeat_interval)
         self.check_interval = float(check_interval)
         self.suspect_after = float(suspect_after)
         self.confirm_after = float(confirm_after)
+        self.progress_stale_after = (
+            None if progress_stale_after is None
+            else float(progress_stale_after))
         self._last_beat: Dict[int, float] = {}
+        # rid -> (progress counter value, time it last ADVANCED): the
+        # timestamp freezes while the counter does, which is exactly the
+        # wedge age the scan measures
+        self._progress: Dict[int, Tuple[int, float]] = {}
         self._suspected: Set[int] = set()
 
-    def beat(self, rid: int, now: float):
+    def beat(self, rid: int, now: float,
+             progress: Optional[int] = None, busy: bool = False):
+        """Record a heartbeat.  ``progress`` is the replica's cumulative
+        processed-token counter at beat time and ``busy`` whether it
+        held active slots; beats without them (birth beats, minimal
+        transports) leave the progress record untouched."""
         self._last_beat[rid] = now
+        if progress is None:
+            return
+        if not busy:
+            # idle is healthy: drop the record so a later busy phase
+            # starts its staleness clock fresh
+            self._progress.pop(rid, None)
+            return
+        prev = self._progress.get(rid)
+        if prev is None or progress != prev[0]:
+            self._progress[rid] = (progress, now)
 
     def forget(self, rid: int):
         """Stop monitoring (graceful terminate / confirmed dead)."""
         self._last_beat.pop(rid, None)
+        self._progress.pop(rid, None)
         self._suspected.discard(rid)
+
+    def _wedge_age(self, rid: int, now: float) -> float:
+        """Seconds the replica has been busy without progress (0 when
+        not tracked or the cross-check is disabled)."""
+        if self.progress_stale_after is None:
+            return 0.0
+        rec = self._progress.get(rid)
+        return 0.0 if rec is None else now - rec[1]
 
     def scan(self, replicas, now: float
              ) -> Tuple[List[int], List[int], List[object]]:
@@ -73,10 +119,13 @@ class FailureDetector:
             if last is None:
                 continue
             age = now - last
+            wedged = (self.progress_stale_after is not None
+                      and self._wedge_age(rep.rid, now)
+                      >= self.progress_stale_after)
             if age >= self.confirm_after:
                 confirmed.append(rep)
                 self.forget(rep.rid)
-            elif age >= self.suspect_after:
+            elif age >= self.suspect_after or wedged:
                 if rep.rid not in self._suspected:
                     self._suspected.add(rep.rid)
                     suspects.append(rep.rid)

@@ -177,6 +177,13 @@ class ClusterMetrics:
         self.endpoint_retries = 0        # staging ops that retried
         self.retry_backoff_s = 0.0       # accounted retry backoff
         self.quarantines = 0             # straggler quarantine orders
+        # vertical elasticity & QoS (zero-filled in summary() like the
+        # chaos block, so horizontal-only runs keep the same schema)
+        self.vertical_grows = 0          # in-place lane-count increases
+        self.vertical_shrinks = 0        # in-place lane-count decreases
+        self.vertical_evictions = 0      # slots displaced by a shrink
+        self.resize_stage_s = 0.0        # real pack/stage seconds spent
+        self.qos_slot_seconds: Dict[str, float] = {}   # tier -> slot-s
 
     def attach_ledger(self, ledger):
         """Market mode: the exchange's ``SavingsLedger`` reports savings
@@ -248,6 +255,23 @@ class ClusterMetrics:
         self.checkpoints += 1
         self.checkpointed_units += units
         self.checkpoint_stage_s += ckpt_s
+
+    # ------------------------------------------------------ vertical/QoS
+    def on_resize(self, rid: int, old_batch: int, new_batch: int, *,
+                  evicted: int, stage_s: float):
+        """One executed ``ResizeOrder``: grow or shrink by lane delta,
+        plus the slots it displaced and the real staging seconds."""
+        if new_batch > old_batch:
+            self.vertical_grows += 1
+        elif new_batch < old_batch:
+            self.vertical_shrinks += 1
+        self.vertical_evictions += evicted
+        self.resize_stage_s += stage_s
+
+    def on_qos_slot(self, tier: str, seconds: float):
+        """Accumulate slot-seconds of lane occupancy for a QoS tier."""
+        self.qos_slot_seconds[tier] = (
+            self.qos_slot_seconds.get(tier, 0.0) + seconds)
 
     # ------------------------------------------------------------ replica
     def on_launch(self, rid: int, itype: str, *,
@@ -433,6 +457,18 @@ class ClusterMetrics:
             "endpoint_retries": self.endpoint_retries,
             "retry_backoff_s": self.retry_backoff_s,
             "quarantines": self.quarantines,
+            # vertical elasticity & QoS — always emitted (zero-filled)
+            # so horizontal-only scenarios keep a stable schema
+            "vertical_grows": self.vertical_grows,
+            "vertical_shrinks": self.vertical_shrinks,
+            "vertical_evictions": self.vertical_evictions,
+            "resize_stage_s": self.resize_stage_s,
+            "qos_guaranteed_slot_s": self.qos_slot_seconds.get(
+                "guaranteed", 0.0),
+            "qos_burstable_slot_s": self.qos_slot_seconds.get(
+                "burstable", 0.0),
+            "qos_best_effort_slot_s": self.qos_slot_seconds.get(
+                "best_effort", 0.0),
         }
         for pool, cost in sorted(self.pool_dollar_cost(now).items()):
             out[f"dollar_cost_{pool}"] = cost

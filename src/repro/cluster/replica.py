@@ -260,6 +260,30 @@ class Replica:
         assert self.serving, self.state
         self.engine.resume(units)
 
+    def resize(self, *, batch_size: Optional[int] = None,
+               decode_block: Optional[int] = None,
+               kv_pool_blocks: Optional[int] = None,
+               evict_key=None
+               ) -> Tuple[List[WorkUnit], Tuple[float, float]]:
+        """In-place vertical resize: change the engine's lane count /
+        decode block / paged pool without draining — surviving slots
+        keep decoding bit-identically.  Evicted units (a shrink past the
+        live slot count) stage through the endpoint like any preemption
+        and come back PAUSED; the caller parks and later resumes them.
+        Bumps the topology epoch: routers cache per-pool capacity
+        estimates that a resize invalidates."""
+        assert self.serving, self.state
+        evicted = self.engine.resize(batch_size=batch_size,
+                                     decode_block=decode_block,
+                                     kv_pool_blocks=kv_pool_blocks,
+                                     evict_key=evict_key)
+        if decode_block is not None:
+            self.decode_block = max(int(decode_block), 1)
+        Replica.topology_epoch += 1
+        times = self._stage(evicted, f"resize_r{self.rid}") \
+            if evicted else (0.0, 0.0)
+        return evicted, times
+
     def drain_units(self) -> Tuple[List[WorkUnit], List[Request],
                                    Tuple[float, float]]:
         """Pack ALL in-flight work through the endpoint and empty the

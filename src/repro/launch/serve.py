@@ -126,6 +126,17 @@ def run_cluster(args, cfg, params):
         checkpoint = CheckpointPolicy(interval=args.checkpoint_every)
     elif args.chaos is not None:
         checkpoint = CheckpointPolicy()
+    # --vertical arms an in-place resize recommender; --qos layers the
+    # Guaranteed/Burstable/BestEffort capacity contract on admission and
+    # shrink-eviction order (either works alone, they compose when both
+    # are set)
+    qos = vertical = None
+    if args.qos or args.vertical != "off":
+        from repro.vertical import QoSPolicy, VERTICAL_POLICIES
+        if args.qos:
+            qos = QoSPolicy()
+        if args.vertical != "off":
+            vertical = VERTICAL_POLICIES[args.vertical](qos=qos)
     scaling = None
     if args.scaling == "cost_aware":
         if exchange is not None:
@@ -152,7 +163,8 @@ def run_cluster(args, cfg, params):
                         market=exchange,
                         fallback=args.fallback if exchange else None,
                         trace=trace, checkpoint=checkpoint,
-                        health=health, straggler=straggler)
+                        health=health, straggler=straggler,
+                        vertical=vertical, qos=qos)
     from repro.serving.workload import make_arrivals
     reqs = _make_requests(args, cfg)
     cl.attach_arrivals(make_arrivals(args.arrival, reqs, seed=args.seed))
@@ -176,6 +188,16 @@ def run_cluster(args, cfg, params):
     if out["preemptions"]:
         print(f"  preemptions={out['preemptions']} "
               f"resumes={out['resumes']}")
+    if out["vertical_grows"] or out["vertical_shrinks"]:
+        print(f"  vertical: grows={out['vertical_grows']} "
+              f"shrinks={out['vertical_shrinks']} "
+              f"evictions={out['vertical_evictions']} "
+              f"stage={out['resize_stage_s']*1e3:.1f}ms")
+    if args.qos:
+        print(f"  qos slot-s: guaranteed="
+              f"{out['qos_guaranteed_slot_s']:.1f} "
+              f"burstable={out['qos_burstable_slot_s']:.1f} "
+              f"best_effort={out['qos_best_effort_slot_s']:.1f}")
     if out["hard_kills"] or out["checkpoints"]:
         print(f"  chaos: hard_kills={out['hard_kills']} "
               f"lost={out['requests_lost']} "
@@ -255,6 +277,17 @@ def main():
                     choices=("backlog", "cost_aware"),
                     help="cost_aware shops the fleet's instance types by "
                          "speed per dollar on every scale-up/replacement")
+    ap.add_argument("--vertical", default="off",
+                    choices=("off", "fixed", "window"),
+                    help="in-place replica resize: fixed reacts to "
+                         "instantaneous backlog per lane, window to a "
+                         "sliding-window mean (no drain; evicted slots "
+                         "park and resume)")
+    ap.add_argument("--qos", action="store_true",
+                    help="QoS-classed capacity: interactive=Guaranteed "
+                         "(reserved), standard=Burstable, batch="
+                         "BestEffort (bursts into idle capacity, "
+                         "evicted first on shrink)")
     ap.add_argument("--slo-mix", type=float, default=None,
                     help="serve an interactive/batch SLO mix with this "
                          "interactive fraction (default: class-less)")

@@ -371,6 +371,8 @@ class ServingEngine:
         self.chunk_prefills = 0     # bulk prefill dispatches issued
         self.preemptions = 0        # slots paused via preempt()
         self.resumes = 0            # paused units re-admitted via resume()
+        self.resizes = 0            # in-place geometry changes via resize()
+        self.resize_evictions = 0   # slots evicted (paused) by a shrink
         self._peak_slots = 0        # high-water concurrent occupied slots
         self._chunk_tokens_pending = 0
         if prefill_mode == "chunked" and cfg.family in zoo.BULK_PREFILL_FAMILIES:
@@ -1064,3 +1066,104 @@ class ServingEngine:
                 units.append(WorkUnit(snapshot=snap, uid=uid,
                                       hops=list(hops), origin=origin))
         return units
+
+    # ------------------------------------------------- vertical elasticity
+    @staticmethod
+    def _default_evict_key(u: "WorkUnit") -> Tuple:
+        """Keep-preference order under a shrink: most urgent SLO class
+        first (lowest priority number), then most progress (evicting a
+        nearly-done stream wastes the most sunk work), uid tiebreak."""
+        prio = u.slo.priority if u.slo is not None else 1
+        return (prio, -u.snapshot.fed, u.uid)
+
+    def resize(self, *, batch_size: Optional[int] = None,
+               decode_block: Optional[int] = None,
+               kv_pool_blocks: Optional[int] = None,
+               evict_key=None) -> List["WorkUnit"]:
+        """In-place geometry change: repack every live slot through the
+        canonical ``SlotSnapshot`` path and rebuild the decode state at
+        the new ``(batch_size, kv_pool_blocks)`` — no drain, no restart.
+
+        Surviving slots re-admit through ``unpack``/``_install`` (ahead
+        of the queue, re-blocked into the new pool geometry) so their
+        streams continue bit-identically; the sampler rng is carried
+        across so temperature>0 streams keep their draw sequence.  Slots
+        that no longer fit (fewer lanes, or a smaller block pool) come
+        back as ``PAUSED`` WorkUnits — the same objects a ``preempt``
+        would return, ready for a resume here or anywhere else.
+        ``evict_key`` orders keep-preference (lowest kept first to fill
+        capacity); the default keeps the most urgent SLO classes, the
+        QoS layer passes BestEffort-evicts-first.
+
+        Compiled decode/prefill functions are keyed by shape, so a
+        resize costs at most one new compilation per fresh geometry and
+        nothing when bouncing between already-seen sizes.
+        """
+        from repro.serving.workunit import PAUSED
+        new_batch = self.batch if batch_size is None else int(batch_size)
+        if new_batch < 1:
+            raise ValueError(f"batch_size must be >= 1, got {new_batch}")
+        if decode_block is not None:
+            self.decode_block = max(int(decode_block), 1)
+        new_pool = self.pool_blocks
+        if kv_pool_blocks is not None:
+            if self.cache_mode != "paged":
+                raise ValueError(
+                    "kv_pool_blocks only applies to cache_mode='paged'")
+            new_pool = int(kv_pool_blocks)
+            if new_pool < self.max_blocks:
+                raise ValueError(
+                    f"kv_pool_blocks={new_pool} cannot hold one full "
+                    f"request ({self.max_blocks} blocks) — admission "
+                    f"would wedge")
+        elif self.cache_mode == "paged" and batch_size is not None:
+            # pool follows the lane count by default (the dense-equivalent
+            # memory budget at the new width)
+            new_pool = new_batch * self.max_blocks
+        if new_batch == self.batch and new_pool == self.pool_blocks:
+            return []              # decode_block-only change: no repack
+        units = self.pack()        # polls + harvests completions first
+        units.sort(key=evict_key or self._default_evict_key)
+        keep: List["WorkUnit"] = []
+        evicted: List["WorkUnit"] = []
+        lanes, blocks_free = new_batch, new_pool
+        for u in units:
+            need = (self._blocks_needed(self._req_maxfed(u.snapshot.request))
+                    if self.cache_mode == "paged" else 0)
+            if lanes > 0 and need <= blocks_free:
+                keep.append(u)
+                lanes -= 1
+                blocks_free -= need
+            else:
+                evicted.append(u)
+        rng = self.sample.rng      # carried across the rebuild
+        self.batch = new_batch
+        self.shape = ShapeConfig("serve", self.max_seq, new_batch, "decode")
+        if self.cache_mode == "paged":
+            self.pool_blocks = new_pool
+            self.state = zoo.init_paged_decode_state(
+                self.cfg, self.shape, self.block_size, new_pool)
+            self._alloc = BlockAllocator(new_pool)
+            self._tables = np.full((new_batch, self.max_blocks),
+                                   new_pool, np.int32)
+        else:
+            self.state = zoo.init_decode_state(self.cfg, self.shape,
+                                               fill_len=0)
+        self.sample = zoo.init_sample_state(
+            self.cfg, self.shape, seed=0)._replace(rng=rng)
+        self._prompt_buf = jnp.zeros((new_batch, self.max_seq), jnp.int32)
+        self._slots = [None] * new_batch
+        self._unit_meta = {}
+        self._fed = np.zeros(new_batch, np.int64)
+        self._plen = np.ones(new_batch, np.int64)
+        self._maxfed = np.zeros(new_batch, np.int64)
+        self._next_tok_host = np.zeros(new_batch, np.int64)
+        self._out_read = np.zeros(new_batch, np.int64)
+        # survivors re-admit ahead of everything already waiting
+        self._restore = keep + self._restore
+        for u in evicted:
+            u.state = PAUSED
+        self.resizes += 1
+        self.resize_evictions += len(evicted)
+        self._admit()
+        return evicted

@@ -74,6 +74,8 @@ class SimEngine:
         self.chunk_prefills = 0
         self.preemptions = 0
         self.resumes = 0
+        self.resizes = 0
+        self.resize_evictions = 0
         self._peak_slots = 0
         self._chunk_tokens_pending = 0
 
@@ -350,3 +352,43 @@ class SimEngine:
                 units.append(WorkUnit(snapshot=snap, uid=uid,
                                       hops=list(hops), origin=origin))
         return units
+
+    # ------------------------------------------------- vertical elasticity
+    def resize(self, *, batch_size: Optional[int] = None,
+               decode_block: Optional[int] = None,
+               kv_pool_blocks: Optional[int] = None,
+               evict_key=None) -> List:
+        """Exact mirror of ``ServingEngine.resize`` minus the device:
+        repack live slots, rebuild the host mirrors at the new lane
+        count, re-admit survivors ahead of the queue, return evictees as
+        ``PAUSED`` units.  ``kv_pool_blocks`` is accepted and ignored
+        (the sim has no block pool), matching the constructor contract.
+        """
+        from repro.serving.engine import ServingEngine
+        from repro.serving.workunit import PAUSED
+        del kv_pool_blocks
+        new_batch = self.batch if batch_size is None else int(batch_size)
+        if new_batch < 1:
+            raise ValueError(f"batch_size must be >= 1, got {new_batch}")
+        if decode_block is not None:
+            self.decode_block = max(int(decode_block), 1)
+        if new_batch == self.batch:
+            return []
+        units = self.pack()
+        units.sort(key=evict_key or ServingEngine._default_evict_key)
+        keep, evicted = units[:new_batch], units[new_batch:]
+        self.batch = new_batch
+        self._slots = [None] * new_batch
+        self._unit_meta = {}
+        self._fed = np.zeros(new_batch, np.int64)
+        self._plen = np.ones(new_batch, np.int64)
+        self._maxfed = np.zeros(new_batch, np.int64)
+        self._next_tok_host = np.zeros(new_batch, np.int64)
+        self._out_read = np.zeros(new_batch, np.int64)
+        self._restore = keep + self._restore
+        for u in evicted:
+            u.state = PAUSED
+        self.resizes += 1
+        self.resize_evictions += len(evicted)
+        self._admit()
+        return evicted

@@ -1,0 +1,496 @@
+"""Vertical elasticity tests: in-place resize + QoS-classed capacity.
+
+The tentpole invariants:
+
+* **Bit-identity** — a mid-flight ``resize`` (grow or shrink, dense or
+  paged or sim, causal or ssm) never changes a surviving stream: final
+  tokens match a never-resized reference exactly, and evicted units
+  resume to the identical continuation.
+* **Conservation** — any interleaving of resize/preempt/resume keeps
+  every WorkUnit accounted for (active + paused + queued + done covers
+  all submissions) and, for paged engines, keeps the block allocator's
+  free + owned partition exact.
+* **QoS** — SLO classes map onto Guaranteed/Burstable/BestEffort;
+  shrinks evict BestEffort first; BestEffort arrivals hold at the door
+  until the pool has idle capacity beyond the Guaranteed reservation.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_zoo as zoo
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.simengine import SimEngine, sim_token
+from repro.serving.workload import (BATCH, INTERACTIVE, STANDARD,
+                                    SLOClass, classed_requests,
+                                    synthetic_requests)
+from repro.serving.workunit import PAUSED
+from repro.cluster import (CheckpointPolicy, FailureDetector, InstanceType,
+                           ResizeOrder, ServingCluster,
+                           VerticalScalingPolicy)
+from repro.vertical import (BEST_EFFORT, BURSTABLE, GUARANTEED,
+                            FixedThresholdVertical, QoSPolicy,
+                            SlidingWindowVertical, qos_for)
+
+from tests._hypothesis_compat import given, settings, st
+
+ARCHS = ["granite-8b", "mamba2-780m"]     # causal + ssm families
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        out[arch] = (cfg,
+                     zoo.init_state(cfg, jax.random.PRNGKey(0)).params)
+    return out
+
+
+def _requests(n, seed=3, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(
+                        0, 200, int(rng.integers(3, 20))).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _reference_tokens(cfg, params, reqs_factory, **kw):
+    """Final streams from a never-resized engine big enough for all."""
+    reqs = reqs_factory()
+    eng = ServingEngine(cfg, params, batch_size=len(reqs), **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return [list(r.out_tokens) for r in reqs]
+
+
+# ----------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grow_mid_flight_bit_identical(models, arch):
+    """Grow 2 -> 4 lanes mid-decode: the surviving streams and the
+    newly-admitted queue both finish exactly as a never-resized engine."""
+    cfg, params = models[arch]
+    mk = lambda: _requests(4)                               # noqa: E731
+    ref = _reference_tokens(cfg, params, mk, max_seq=64)
+    reqs = mk()
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    evicted = eng.resize(batch_size=4)
+    assert evicted == [] and eng.resizes == 1
+    eng.run_until_idle()
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shrink_evict_resume_bit_identical(models, arch):
+    """Shrink 4 -> 2 evicts the least-progressed units as PAUSED;
+    resuming them continues every stream bit-identically."""
+    cfg, params = models[arch]
+    mk = lambda: _requests(4)                               # noqa: E731
+    ref = _reference_tokens(cfg, params, mk, max_seq=64)
+    reqs = mk()
+    eng = ServingEngine(cfg, params, batch_size=4, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    evicted = eng.resize(batch_size=2)
+    assert len(evicted) == 2 and eng.resize_evictions == 2
+    assert all(u.state is PAUSED for u in evicted)
+    eng.resume(evicted)
+    eng.run_until_idle()
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+
+def test_paged_resize_grow_shrink_and_pool(models):
+    """Paged cache: grow re-pools by default, an explicit kv_pool_blocks
+    resize re-blocks through the canonical snapshot path, and the block
+    allocator's partition stays exact across every transition."""
+    cfg, params = models["granite-8b"]
+    mk = lambda: _requests(4)                               # noqa: E731
+    ref = _reference_tokens(cfg, params, mk, max_seq=64,
+                            cache_mode="paged", block_size=8)
+    reqs = mk()
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=64,
+                        cache_mode="paged", block_size=8)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert eng.resize(batch_size=4) == []     # grow: default pool scales
+    assert eng.pool_blocks == 4 * eng.max_blocks
+    eng._alloc.check_invariants()
+    for _ in range(2):
+        eng.step()
+    # explicit pool change (same lanes): pure re-block, nothing evicted
+    assert eng.resize(kv_pool_blocks=4 * eng.max_blocks + 3) == []
+    eng._alloc.check_invariants()
+    evicted = eng.resize(batch_size=2)        # shrink evicts two
+    assert len(evicted) == 2
+    eng._alloc.check_invariants()
+    eng.resume(evicted)
+    eng.run_until_idle()
+    eng._alloc.check_invariants()
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+
+def test_sim_engine_resize_mirrors_real(models):
+    """SimEngine speaks the same resize verb: grow admits the queue,
+    shrink evicts PAUSED units, resumed streams stay the deterministic
+    ``sim_token`` sequence."""
+    del models
+    reqs = _requests(5)
+    eng = SimEngine(batch_size=4, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(2):
+        eng.step()
+    evicted = eng.resize(batch_size=1)
+    assert evicted and all(u.state is PAUSED for u in evicted)
+    assert eng.resizes == 1 and eng.resize_evictions == len(evicted)
+    eng.resume(evicted)
+    eng.resize(batch_size=3)
+    eng.run_until_idle()
+    for r in reqs:
+        assert r.done
+        assert list(r.out_tokens) == [sim_token(r.rid, i)
+                                      for i in range(len(r.out_tokens))]
+
+
+def test_decode_block_only_resize_is_free(models):
+    """Changing only the decode window repacks nothing — same slots,
+    same streams, no eviction, no resize counted."""
+    cfg, params = models["granite-8b"]
+    mk = lambda: _requests(2)                               # noqa: E731
+    ref = _reference_tokens(cfg, params, mk, max_seq=64)
+    reqs = mk()
+    eng = ServingEngine(cfg, params, batch_size=2, max_seq=64)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert eng.resize(decode_block=1) == []
+    assert eng.decode_block == 1 and eng.resizes == 0
+    eng.run_until_idle()
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+
+def test_resize_rejects_bad_geometry(models):
+    cfg, params = models["granite-8b"]
+    dense = ServingEngine(cfg, params, batch_size=2, max_seq=64)
+    with pytest.raises(ValueError, match="paged"):
+        dense.resize(kv_pool_blocks=64)
+    paged = ServingEngine(cfg, params, batch_size=2, max_seq=64,
+                          cache_mode="paged", block_size=8)
+    with pytest.raises(ValueError, match="full request"):
+        paged.resize(kv_pool_blocks=paged.max_blocks - 1)
+    with pytest.raises(ValueError):
+        paged.resize(batch_size=0)
+
+
+# ----------------------------------------------------------- conservation
+def _interleave(seed: int, *, paged: bool):
+    """Random resize/preempt/resume/step interleaving on one engine:
+    every submitted request must finish with its deterministic stream
+    (sim) and the paged allocator's partition must stay exact."""
+    rng = np.random.default_rng(seed)
+    if paged:
+        cfg = get_config("granite-8b").reduced()
+        params = zoo.init_state(cfg, jax.random.PRNGKey(0)).params
+        eng = ServingEngine(cfg, params, batch_size=3, max_seq=64,
+                            cache_mode="paged", block_size=8)
+    else:
+        eng = SimEngine(batch_size=3, max_seq=64)
+    reqs = _requests(6, seed=seed, max_new=5)
+    for r in reqs:
+        eng.submit(r)
+    paused = []
+    for _ in range(rng.integers(8, 16)):
+        op = rng.integers(0, 4)
+        if op == 0:
+            eng.step()
+        elif op == 1:
+            # a resize parks its evictions exactly like a preemption
+            paused.extend(eng.resize(batch_size=int(rng.integers(1, 5))))
+        elif op == 2:
+            paused.extend(eng.preempt())
+        elif op == 3 and paused:
+            batch, paused = paused, []
+            eng.resume(batch)
+        if paged:
+            eng._alloc.check_invariants()
+    eng.resume(paused)
+    eng.run_until_idle()
+    if paged:
+        eng._alloc.check_invariants()
+        assert eng._alloc.in_use == 0
+    assert all(r.done for r in reqs)
+    if not paged:
+        for r in reqs:
+            assert list(r.out_tokens) == [sim_token(r.rid, i)
+                                          for i in range(len(r.out_tokens))]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_resize_interleaving_conserves_units_sim(seed):
+    _interleave(seed, paged=False)
+
+
+def test_resize_interleaving_conserves_blocks_paged():
+    _interleave(0, paged=True)
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=25, deadline=None)
+def test_resize_interleaving_property(seed):
+    _interleave(seed, paged=False)
+
+
+# ------------------------------------------------------------------- QoS
+def test_qos_tier_mapping():
+    assert qos_for(INTERACTIVE) is GUARANTEED
+    assert qos_for(STANDARD) is BURSTABLE
+    assert qos_for(BATCH) is BEST_EFFORT
+    assert qos_for(None) is BURSTABLE
+    # lazily-admitted classes are BestEffort regardless of priority
+    assert qos_for(SLOClass("lazy", 0, admit_lazily=True)) is BEST_EFFORT
+    assert qos_for(SLOClass("low", 3)) is BEST_EFFORT
+
+
+def test_qos_shrink_evicts_best_effort_first():
+    """A QoS-keyed shrink takes batch work before interactive even when
+    the interactive stream has made less progress."""
+    eng = SimEngine(batch_size=4, max_seq=64)
+    slos = [BATCH, INTERACTIVE, BATCH, STANDARD]
+    reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32) + 1,
+                    max_new_tokens=8, slo=s)
+            for i, s in enumerate(slos)]
+    for r in reqs[1:]:          # interactive + batch + standard admitted…
+        eng.submit(r)
+    eng.step()
+    eng.submit(reqs[0])         # …then a late batch stream (least fed)
+    eng.step()
+    evicted = eng.resize(batch_size=2, evict_key=QoSPolicy.evict_key)
+    assert [u.slo_name for u in evicted] == ["batch", "batch"]
+    survivors = {r.slo.name for _, r in eng.slot_requests()}
+    assert survivors == {"interactive", "standard"}
+
+
+def test_qos_best_effort_holds_until_idle_capacity():
+    """BestEffort arrivals hold at the door while the pool's only free
+    lanes are the Guaranteed reservation; they land once load drains."""
+    fleet = [InstanceType("std", speed=1.0, spot=False)]
+    qos = QoSPolicy(reserve_frac=0.5)
+    cl = ServingCluster(None, None, fleet, dt=1.0, batch_size=2,
+                        max_seq=64, engine=SimEngine, qos=qos,
+                        admission="priority")
+    rng = np.random.default_rng(0)
+    mk = lambda rid, slo, new: Request(                     # noqa: E731
+        rid=rid, prompt=rng.integers(0, 200, 4).astype(np.int32),
+        max_new_tokens=new, slo=slo)
+    cl.submit(mk(0, INTERACTIVE, 12), at=0.0)
+    cl.submit(mk(1, BATCH, 10), at=0.1)     # pool busy: must hold
+    out = cl.run(max_time=500)
+    assert out["completed"] == 2 and out["dropped"] == 0
+    assert out["qos_guaranteed_slot_s"] > 0.0
+    assert out["qos_best_effort_slot_s"] > 0.0
+    # the shorter batch stream was held at the door, so it finished
+    # after the longer interactive one despite arriving right behind it
+    traces = cl.metrics.traces
+    assert traces[1].done_t > traces[0].done_t
+
+
+# ---------------------------------------------------- cluster integration
+def _fleet(n):
+    return [InstanceType("std", speed=1.0, spot=False)] * n
+
+
+def test_cluster_vertical_grow_shrink_smoke():
+    """Backlog grows the lanes, quiet shrinks them back; nothing drops
+    and every stream stays deterministic."""
+    qos = QoSPolicy()
+    vert = FixedThresholdVertical(min_batch=1, max_batch=4, step=1,
+                                  grow_backlog=10.0, shrink_backlog=2.0,
+                                  cooldown=2.0, qos=qos)
+    cl = ServingCluster(None, None, _fleet(2), dt=1.0, batch_size=2,
+                        max_seq=64, engine=SimEngine, vertical=vert,
+                        qos=qos, admission="priority")
+    reqs = classed_requests(24, 200, seed=0)
+    for i, r in enumerate(reqs):
+        cl.submit(r, at=0.2 * i)
+    out = cl.run(max_time=5000)
+    assert out["completed"] == 24 and out["dropped"] == 0
+    assert out["vertical_grows"] > 0 and out["vertical_shrinks"] > 0
+    for r in reqs:
+        assert list(r.out_tokens) == [sim_token(r.rid, i)
+                                      for i in range(len(r.out_tokens))]
+
+
+class _ForcedShrink(VerticalScalingPolicy):
+    """Issue one shrink-to-one order per replica at the first decision
+    tick with live work — the hostile case for conservation."""
+
+    name = "forced"
+
+    def __init__(self):
+        self.done = set()
+
+    def decide(self, view, now):
+        orders = []
+        for rep in view.replicas:
+            if (rep.serving and rep.rid not in self.done
+                    and rep.engine.n_active > 1):
+                self.done.add(rep.rid)
+                orders.append(ResizeOrder(rid=rep.rid, batch_size=1,
+                                          reason="forced"))
+        return orders
+
+
+def test_cluster_shrink_evictions_never_lose_work():
+    """A forced shrink under full load parks evicted units; the resume
+    path re-admits every one of them — zero lost, streams exact."""
+    cl = ServingCluster(None, None, _fleet(2), dt=1.0, batch_size=3,
+                        max_seq=64, engine=SimEngine,
+                        vertical=_ForcedShrink(), qos=QoSPolicy())
+    reqs = synthetic_requests(12, 200, seed=1, prompt_len=(3, 8))
+    for r in reqs:
+        cl.submit(r, at=0.0)
+    out = cl.run(max_time=5000)
+    assert out["completed"] == 12 and out["dropped"] == 0
+    assert out["vertical_shrinks"] >= 1 and out["vertical_evictions"] >= 1
+    assert out["resumes"] >= out["vertical_evictions"]
+    for r in reqs:
+        assert list(r.out_tokens) == [sim_token(r.rid, i)
+                                      for i in range(len(r.out_tokens))]
+
+
+def test_sliding_window_policy_needs_history():
+    """The windowed recommender never resizes on a single bursty tick."""
+    qos = QoSPolicy()
+    fixed = FixedThresholdVertical(grow_backlog=1.0, shrink_backlog=0.5,
+                                   cooldown=0.0, qos=qos)
+    windowed = SlidingWindowVertical(window=100.0, min_samples=3,
+                                     grow_backlog=1.0, shrink_backlog=0.5,
+                                     cooldown=0.0, qos=qos)
+
+    class _Eng:
+        batch = 2
+
+        @staticmethod
+        def backlog_tokens():
+            return 100.0
+
+    class _Rep:
+        rid, model_id, serving = 0, "default", True
+        engine = _Eng()
+
+    class _View:
+        replicas = [_Rep()]
+
+        def pools(self):
+            return ["default"]
+
+        def pool(self, model_id, state="admitting"):
+            return [_Rep()]
+
+        def queued_cost(self, model_id):
+            return 0.0
+
+    assert fixed.decide(_View(), 0.0)          # instant reaction
+    assert not windowed.decide(_View(), 0.0)   # 1 sample: no decision
+    assert not windowed.decide(_View(), 1.0)   # 2 samples: still none
+    assert windowed.decide(_View(), 2.0)       # 3 samples: acts
+
+
+# ------------------------------------------------ satellites: S1, S2, S6
+def test_detector_suspects_wedged_replica():
+    """A replica that heartbeats but stops advancing its progress
+    counter while busy is suspected — and cleared when tokens move or
+    it goes idle.  Wedge staleness never confirms death by itself."""
+
+    class _Rep:
+        def __init__(self, rid):
+            self.rid = rid
+
+    fd = FailureDetector(heartbeat_interval=1.0, check_interval=1.0,
+                         suspect_after=50.0, confirm_after=100.0,
+                         progress_stale_after=5.0)
+    rep = _Rep(0)
+    fd.beat(0, 0.0, progress=10, busy=True)
+    fd.beat(0, 2.0, progress=10, busy=True)      # beating, not moving
+    assert fd.scan([rep], 4.0) == ([], [], [])   # not stale yet
+    suspects, _, confirmed = fd.scan([rep], 6.0)
+    assert suspects == [0] and confirmed == []   # wedged: suspect only
+    fd.beat(0, 7.0, progress=11, busy=True)      # progress resumed
+    _, cleared, _ = fd.scan([rep], 8.0)
+    assert cleared == [0]
+    # idle is healthy, not wedged: no suspicion however long it lasts
+    fd.beat(0, 9.0, progress=11, busy=False)
+    assert fd.scan([rep], 30.0) == ([], [], [])
+    # without the cross-check the same silence goes unnoticed
+    plain = FailureDetector()
+    plain.beat(0, 0.0, progress=10, busy=True)
+    plain.beat(0, 2.0, progress=10, busy=True)
+    assert plain.scan([_Rep(0)], 6.0) == ([], [], [])
+
+
+def test_adaptive_checkpoint_interval():
+    """Chaos and in-flight work shorten the cadence; a quiet fleet
+    relaxes it; a fixed policy never moves; clamps hold at extremes."""
+
+    class _Eng:
+        def __init__(self, fed):
+            self._fed = fed
+
+        def slot_requests(self):
+            return [(i, None) for i in range(len(self._fed))]
+
+        def fed_tokens(self, slot):
+            return self._fed[slot]
+
+    class _Rep:
+        serving = True
+
+        def __init__(self, fed):
+            self.engine = _Eng(fed)
+
+    fixed = CheckpointPolicy(interval=10.0)
+    assert fixed.next_interval([_Rep([500, 500])], 0.0) == 10.0
+
+    ad = CheckpointPolicy(interval=10.0, adaptive=True, fault_window=60.0,
+                          fault_ref=1.0, tokens_ref=100.0)
+    quiet = ad.next_interval([], 0.0)
+    assert quiet == 10.0 * ad.quiet_relax        # nothing at risk: relax
+    busy = ad.next_interval([_Rep([150, 50])], 0.0)
+    assert busy < 10.0                           # live tokens: tighten
+    ad.note_fault(1.0)
+    ad.note_fault(2.0)
+    chaotic = ad.next_interval([_Rep([150, 50])], 3.0)
+    assert chaotic < busy                        # chaos tightens further
+    assert chaotic >= ad.min_interval
+    # faults age out of the window: cadence relaxes back
+    assert ad.next_interval([_Rep([150, 50])], 200.0) == busy
+    # clamp: absurd pressure still floors at min_interval
+    assert ad.next_interval([_Rep([10 ** 9])], 3.0) == ad.min_interval
+    with pytest.raises(ValueError, match="min <= interval <= max"):
+        CheckpointPolicy(interval=1.0, min_interval=2.0, max_interval=4.0)
+
+
+def test_summary_schema_zero_fills_vertical_keys():
+    """Horizontal-only runs emit every vertical/QoS key zero-filled, so
+    downstream JSON consumers see one stable schema (PR 8 S6 pattern)."""
+    cl = ServingCluster(None, None, _fleet(1), dt=1.0, batch_size=2,
+                        max_seq=64, engine=SimEngine)
+    for r in synthetic_requests(3, 200, seed=0, prompt_len=(3, 6)):
+        cl.submit(r, at=0.0)
+    out = cl.run(max_time=500)
+    for key in ("vertical_grows", "vertical_shrinks", "vertical_evictions",
+                "resize_stage_s", "qos_guaranteed_slot_s",
+                "qos_burstable_slot_s", "qos_best_effort_slot_s"):
+        assert key in out and out[key] == 0, key
